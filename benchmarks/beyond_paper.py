@@ -1,0 +1,128 @@
+"""Beyond-paper optimizations, each measured against the paper-faithful
+baseline (EXPERIMENTS.md §Perf records both separately):
+
+  1. batched (chunk-parallel) replay — lm_append folds k messages per
+     compiled call; the *measured* speedup rescales the replay service rate
+     and Eq. 5's threshold (cutoff.batched_cutoff_threshold).  Collapses
+     the high-rate regime where paper-MS2M degrades.
+  2. content-addressed image dedup — after the first migration, the weight
+     chunks are already in the registry; subsequent pushes upload only the
+     KV-cache delta (the paper re-pushes full images each time; cf. Ma et
+     al. [12] layered-storage motivation).
+  3. parallel target provisioning — pod creation overlaps image build+push
+     (the paper's Fig. 2 sequence is strictly serial).  [modeled via the
+     timing constants; reported as a what-if delta]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+
+from benchmarks import constants as C
+from repro.core import (
+    make_jax_worker_factory,
+    measure_replay_speedup,
+    run_migration_experiment,
+)
+
+
+def run_batched_replay_bench(rates=(10.0, 16.0, 18.0, 19.0), repeats=3,
+                             out_path=None):
+    make, cfg = make_jax_worker_factory(max_seq=2048)
+    worker = make()
+    speedup = measure_replay_speedup(cfg, worker.params, n=256, max_seq=512)
+    rows = [{"measured_replay_speedup": round(speedup, 2)}]
+    with tempfile.TemporaryDirectory() as tmp:
+        for rate in rates:
+            for label, batched in (("paper_sequential", False),
+                                   ("batched_replay", True)):
+                migs, downs, ok = [], [], True
+                for rep in range(repeats):
+                    r = run_migration_experiment(
+                        "ms2m_cutoff", rate,
+                        registry_root=os.path.join(tmp, f"{label}{rate}{rep}"),
+                        processing_ms=C.PROCESSING_MS,
+                        t_replay_max=C.T_REPLAY_MAX,
+                        seed=rep,
+                        batched_replay=batched,
+                        replay_speedup=speedup,
+                    )
+                    migs.append(r.migration_time)
+                    downs.append(r.downtime)
+                    ok = ok and r.verified
+                rows.append({
+                    "variant": label, "rate": rate,
+                    "migration_time_mean": round(sum(migs) / len(migs), 3),
+                    "downtime_mean": round(sum(downs) / len(downs), 3),
+                    "all_verified": ok,
+                })
+    if out_path:
+        os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+        with open(out_path, "w") as f:
+            for row in rows:
+                f.write(json.dumps(row) + "\n")
+    return rows
+
+
+def run_dedup_bench(out_path=None):
+    """Two consecutive migrations of the same worker: the second push should
+    upload ~only the state delta (weights dedup to zero)."""
+    import jax
+    from repro.checkpoint import Registry
+    from repro.core.consumer import StatefulConsumer
+    from repro.broker.broker import Message
+
+    make, cfg = make_jax_worker_factory(max_seq=512)
+    worker = make()
+    msgs = [Message(i, {"token": (13 * i) % cfg.vocab_size}, 0.0)
+            for i in range(64)]
+    worker.replay_sequential(msgs[:32])
+    with tempfile.TemporaryDirectory() as tmp:
+        reg = Registry(tmp)
+        # MS2M images carry weights (infra payload) + state; model the
+        # paper's full-image push as weights+state in one image:
+        from repro.models.common import split_params
+        weights, _ = split_params(worker.params)
+        r1 = reg.push_image({"weights": weights, "state": worker.state_tree()})
+        worker.replay_sequential(msgs[32:])  # state advances
+        r2 = reg.push_image({"weights": weights, "state": worker.state_tree()})
+        rows = [{
+            "push": "first", "total_mb": round(r1.total_bytes / 1e6, 2),
+            "written_mb": round(r1.written_bytes / 1e6, 2),
+            "dedup_ratio": round(r1.deduped_bytes / max(r1.total_bytes, 1), 4),
+        }, {
+            "push": "second", "total_mb": round(r2.total_bytes / 1e6, 2),
+            "written_mb": round(r2.written_bytes / 1e6, 2),
+            "dedup_ratio": round(r2.deduped_bytes / max(r2.total_bytes, 1), 4),
+        }]
+    if out_path:
+        os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+        with open(out_path, "w") as f:
+            for row in rows:
+                f.write(json.dumps(row) + "\n")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--out", default="results/beyond_paper.json")
+    args = ap.parse_args(argv)
+    rows = run_batched_replay_bench(repeats=args.repeats,
+                                    out_path=args.out)
+    print(f"measured replay speedup: {rows[0]['measured_replay_speedup']}x")
+    for r in rows[1:]:
+        print(f"{r['variant']:18s} rate={r['rate']:4.1f} "
+              f"mig={r['migration_time_mean']:8.2f}s "
+              f"down={r['downtime_mean']:6.2f}s ok={r['all_verified']}")
+    dd = run_dedup_bench(out_path=args.out.replace(".json", "_dedup.json"))
+    for r in dd:
+        print(f"push {r['push']:6s}: total={r['total_mb']}MB "
+              f"written={r['written_mb']}MB dedup={r['dedup_ratio']*100:.1f}%")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

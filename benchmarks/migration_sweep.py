@@ -1,0 +1,94 @@
+"""Paper Figs. 5-8: migration time + downtime vs message rate, per strategy.
+
+Each (strategy, rate) cell runs REPEATS times with different seeds (the
+paper runs each test case 10 times); we report mean/min/max.  Results are
+deterministic per seed (virtual clock), with real registry bytes and real
+(hash-fold or JAX) state verified after every run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import tempfile
+
+from benchmarks import constants as C
+from repro.core import run_migration_experiment
+
+STRATEGIES = ("stop_and_copy", "ms2m_individual", "ms2m_cutoff",
+              "ms2m_statefulset")
+
+
+def run_sweep(strategies=STRATEGIES, rates=C.SWEEP_RATES, repeats=3,
+              out_path=None, use_jax_consumer=False, batched_replay=False,
+              replay_speedup=1.0, t_replay_max=C.T_REPLAY_MAX):
+    worker_factory = None
+    if use_jax_consumer:
+        from repro.core import make_jax_worker_factory
+        worker_factory, _ = make_jax_worker_factory()
+    rows = []
+    with tempfile.TemporaryDirectory() as tmp:
+        for strat in strategies:
+            for rate in rates:
+                migs, downs, ok = [], [], True
+                phases_acc = {}
+                for rep in range(repeats):
+                    r = run_migration_experiment(
+                        strat, rate,
+                        registry_root=os.path.join(tmp, f"{strat}-{rate}-{rep}"),
+                        processing_ms=C.PROCESSING_MS,
+                        t_replay_max=t_replay_max,
+                        seed=rep,
+                        worker_factory=worker_factory,
+                        batched_replay=batched_replay,
+                        replay_speedup=replay_speedup,
+                    )
+                    migs.append(r.migration_time)
+                    downs.append(r.downtime)
+                    ok = ok and r.verified
+                    for k, v in r.report.phases.items():
+                        phases_acc[k] = phases_acc.get(k, 0.0) + v / repeats
+                row = {
+                    "strategy": strat,
+                    "rate": rate,
+                    "migration_time_mean": round(statistics.mean(migs), 3),
+                    "migration_time_min": round(min(migs), 3),
+                    "migration_time_max": round(max(migs), 3),
+                    "downtime_mean": round(statistics.mean(downs), 3),
+                    "downtime_min": round(min(downs), 3),
+                    "downtime_max": round(max(downs), 3),
+                    "phases_mean": {k: round(v, 3) for k, v in phases_acc.items()},
+                    "all_verified": ok,
+                }
+                rows.append(row)
+    if out_path:
+        os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+        with open(out_path, "w") as f:
+            for row in rows:
+                f.write(json.dumps(row) + "\n")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--repeats", type=int, default=C.REPEATS)
+    ap.add_argument("--strategy", default="all")
+    ap.add_argument("--rates", default=",".join(str(r) for r in C.SWEEP_RATES))
+    ap.add_argument("--jax-consumer", action="store_true")
+    ap.add_argument("--out", default="results/migration_sweep.json")
+    args = ap.parse_args(argv)
+    strategies = STRATEGIES if args.strategy == "all" else (args.strategy,)
+    rates = tuple(float(r) for r in args.rates.split(","))
+    rows = run_sweep(strategies, rates, args.repeats, args.out,
+                     use_jax_consumer=args.jax_consumer)
+    print(f"{'strategy':18s} {'rate':>5s} {'migration(s)':>14s} {'downtime(s)':>12s} ok")
+    for r in rows:
+        print(f"{r['strategy']:18s} {r['rate']:5.1f} "
+              f"{r['migration_time_mean']:14.2f} {r['downtime_mean']:12.2f} "
+              f"{r['all_verified']}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,54 @@
+"""Paper Figs. 12-14: distribution of migration latency across sub-processes
+(checkpoint, image build+push, service restoration, message replay, cutover)
+per strategy x message rate."""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks import constants as C
+from benchmarks.migration_sweep import run_sweep
+
+PHASES = ("checkpoint", "image_build_push", "identity_release",
+          "service_restoration", "message_replay", "cutover",
+          "source_teardown")
+
+
+def run_breakdown(repeats=3, out_path=None):
+    rows = run_sweep(("ms2m_individual", "ms2m_cutoff", "ms2m_statefulset"),
+                     C.PAPER_RATES, repeats)
+    out = []
+    for r in rows:
+        total = sum(r["phases_mean"].values()) or 1.0
+        shares = {p: round(r["phases_mean"].get(p, 0.0) / total, 4)
+                  for p in PHASES}
+        out.append({
+            "strategy": r["strategy"], "rate": r["rate"],
+            "total_s": round(total, 3),
+            "phase_seconds": r["phases_mean"],
+            "phase_shares": shares,
+        })
+    if out_path:
+        os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+        with open(out_path, "w") as f:
+            for row in out:
+                f.write(json.dumps(row) + "\n")
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--repeats", type=int, default=C.REPEATS)
+    ap.add_argument("--out", default="results/phase_breakdown.json")
+    args = ap.parse_args(argv)
+    rows = run_breakdown(args.repeats, args.out)
+    for r in rows:
+        top = sorted(r["phase_shares"].items(), key=lambda kv: -kv[1])[:3]
+        tops = ", ".join(f"{k}={v*100:.1f}%" for k, v in top)
+        print(f"{r['strategy']:18s} rate={r['rate']:4.1f} total={r['total_s']:7.2f}s  {tops}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

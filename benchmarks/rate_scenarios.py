@@ -1,0 +1,57 @@
+"""Paper Figs. 9-11: strategy comparison at low(4)/intermediate(10)/high(16)
+message rates, reported as downtime/migration-time deltas vs stop-and-copy
+(the paper's headline percentages)."""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import tempfile
+
+from benchmarks import constants as C
+from benchmarks.migration_sweep import STRATEGIES, run_sweep
+
+
+def run_scenarios(repeats=3, use_jax_consumer=False, out_path=None,
+                  batched_replay=False, replay_speedup=1.0):
+    rows = run_sweep(STRATEGIES, C.PAPER_RATES, repeats,
+                     use_jax_consumer=use_jax_consumer,
+                     batched_replay=batched_replay,
+                     replay_speedup=replay_speedup)
+    base = {r["rate"]: r for r in rows if r["strategy"] == "stop_and_copy"}
+    out = []
+    for r in rows:
+        b = base[r["rate"]]
+        out.append({
+            **r,
+            "downtime_reduction_vs_sac":
+                round(1 - r["downtime_mean"] / b["downtime_mean"], 5),
+            "migration_increase_vs_sac":
+                round(r["migration_time_mean"] / b["migration_time_mean"] - 1, 5),
+        })
+    if out_path:
+        os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+        with open(out_path, "w") as f:
+            for row in out:
+                f.write(json.dumps(row) + "\n")
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--repeats", type=int, default=C.REPEATS)
+    ap.add_argument("--jax-consumer", action="store_true")
+    ap.add_argument("--out", default="results/rate_scenarios.json")
+    args = ap.parse_args(argv)
+    rows = run_scenarios(args.repeats, args.jax_consumer, args.out)
+    print(f"{'strategy':18s} {'rate':>5s} {'down(s)':>8s} {'Δdown':>8s} {'Δmig':>8s}")
+    for r in rows:
+        print(f"{r['strategy']:18s} {r['rate']:5.1f} {r['downtime_mean']:8.2f} "
+              f"{r['downtime_reduction_vs_sac']*100:7.2f}% "
+              f"{r['migration_increase_vs_sac']*100:7.2f}%")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,82 @@
+"""Benchmark entry point: one function per paper table/figure group.
+
+Prints ``name,us_per_call,derived`` CSV rows per the harness contract, plus
+the full result files under results/.
+
+  fig5_8   migration_sweep    — time/downtime vs rate, 4 strategies
+  fig9_11  rate_scenarios     — low/mid/high rate comparisons + reductions
+  fig12_14 phase_breakdown    — sub-process latency distribution
+  claims   claims             — paper headline validation bands
+  beyond   beyond_paper       — batched replay + registry dedup (ours)
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _csv(name: str, seconds: float, derived: str):
+    print(f"{name},{seconds * 1e6:.1f},{derived}")
+
+
+def main() -> int:
+    t0 = time.time()
+    from benchmarks.migration_sweep import run_sweep
+    from benchmarks.rate_scenarios import run_scenarios
+    from benchmarks.phase_breakdown import run_breakdown
+    from benchmarks.claims import run_claims
+    from benchmarks.beyond_paper import run_batched_replay_bench, run_dedup_bench
+    from benchmarks import constants as C
+
+    repeats = 3  # full paper protocol (10) via: python -m benchmarks.claims
+
+    t = time.time()
+    sweep = run_sweep(repeats=repeats, out_path="results/migration_sweep.json")
+    for r in sweep:
+        if r["rate"] in C.PAPER_RATES:
+            _csv(f"fig5_8/{r['strategy']}@{r['rate']:g}",
+                 r["migration_time_mean"],
+                 f"downtime={r['downtime_mean']}s verified={r['all_verified']}")
+    print(f"# migration_sweep done in {time.time()-t:.1f}s", file=sys.stderr)
+
+    t = time.time()
+    scen = run_scenarios(repeats=repeats, out_path="results/rate_scenarios.json")
+    for r in scen:
+        _csv(f"fig9_11/{r['strategy']}@{r['rate']:g}",
+             r["downtime_mean"],
+             f"down_reduction={r['downtime_reduction_vs_sac']*100:.2f}%")
+    print(f"# rate_scenarios done in {time.time()-t:.1f}s", file=sys.stderr)
+
+    t = time.time()
+    brk = run_breakdown(repeats=repeats, out_path="results/phase_breakdown.json")
+    for r in brk:
+        _csv(f"fig12_14/{r['strategy']}@{r['rate']:g}", r["total_s"],
+             f"replay_share={r['phase_shares']['message_replay']*100:.1f}%")
+    print(f"# phase_breakdown done in {time.time()-t:.1f}s", file=sys.stderr)
+
+    t = time.time()
+    claims = run_claims(repeats=repeats, out_path="results/claims.json")
+    npass = sum(1 for c in claims if c["pass"])
+    _csv("claims/validated", time.time() - t, f"{npass}/{len(claims)} bands pass")
+    print(f"# claims done in {time.time()-t:.1f}s", file=sys.stderr)
+
+    t = time.time()
+    rows = run_batched_replay_bench(repeats=2,
+                                    out_path="results/beyond_paper.json")
+    speedup = rows[0]["measured_replay_speedup"]
+    _csv("beyond/replay_speedup", 0.0, f"{speedup}x chunk-parallel replay")
+    for r in rows[1:]:
+        _csv(f"beyond/{r['variant']}@{r['rate']:g}", r["migration_time_mean"],
+             f"downtime={r['downtime_mean']}s")
+    dd = run_dedup_bench(out_path="results/beyond_paper_dedup.json")
+    for r in dd:
+        _csv(f"beyond/dedup_push_{r['push']}", 0.0,
+             f"written={r['written_mb']}MB dedup={r['dedup_ratio']*100:.1f}%")
+    print(f"# beyond_paper done in {time.time()-t:.1f}s", file=sys.stderr)
+
+    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,59 @@
+"""Quickstart: train a small model, serve it, then live-migrate the serving
+replica with MS2M — the paper's pipeline end-to-end in one script.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core import make_jax_worker_factory, run_migration_experiment
+from repro.data import DataConfig, SyntheticTokenDataset
+from repro.models import transformer as T
+from repro.models.common import split_params
+from repro.optim import adamw
+from repro.train import step as steplib
+
+
+def main():
+    # --- 1. train a tiny LM for a few steps --------------------------------
+    cfg = configs.get_smoke("smollm_360m")
+    tcfg = steplib.TrainStepConfig(remat="none", lr_peak=3e-3,
+                                   warmup_steps=5, total_steps=30)
+    params, _ = split_params(T.init_lm(jax.random.PRNGKey(0), cfg))
+    opt = adamw.adamw_init(params, tcfg.opt)
+    ds = SyntheticTokenDataset(DataConfig(cfg.vocab_size, 64, 8))
+    step_fn = jax.jit(steplib.build_train_step(cfg, tcfg),
+                      donate_argnums=(0, 1))
+    for s in range(30):
+        batch = jax.tree.map(jnp.asarray, ds.batch(s))
+        params, opt, m = step_fn(params, opt, batch, jnp.asarray(s, jnp.int32))
+        if s % 10 == 0:
+            print(f"[quickstart] train step {s}: loss {float(m['loss']):.3f}")
+
+    # --- 2. serve: prefill + a few decode steps ----------------------------
+    cache = T.init_cache(cfg, 2, 64)
+    prompt = {"tokens": jnp.asarray(ds.batch(99)["tokens"][:2, :16])}
+    logits, cache = T.lm_prefill(params, prompt, cfg, cache)
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    for i in range(8):
+        logits, cache = T.lm_decode_step(
+            params, tok, jnp.full((2, 1), 16 + i, jnp.int32), cfg, cache)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    print(f"[quickstart] served 8 decode steps; sample token {int(tok[0,0])}")
+
+    # --- 3. live-migrate a stateful serving replica (MS2M) -----------------
+    make_worker, _ = make_jax_worker_factory(max_seq=512)
+    with tempfile.TemporaryDirectory() as reg:
+        r = run_migration_experiment(
+            "ms2m_individual", message_rate=6.0, registry_root=reg,
+            worker_factory=make_worker, seed=0)
+    print(f"[quickstart] MS2M migration: migration_time={r.migration_time:.2f}s"
+          f" downtime={r.downtime:.2f}s (stop-and-copy would be ~49s)")
+    print(f"[quickstart] migrated state verified bit-exact: {r.verified}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Live migration of a continuous-batching SERVING ENGINE.
+
+The engine (slot KV caches + slot table) is itself an MS2M worker: its
+message log is the admitted request stream.  We serve traffic, migrate the
+whole engine with MS2M-individual, and verify the migrated engine equals an
+uninterrupted reference fold.
+
+  PYTHONPATH=src python examples/serving_engine_migration.py
+"""
+import tempfile
+
+import jax
+
+from repro import configs
+from repro.core import run_migration_experiment
+from repro.models import transformer as T
+from repro.serving import ServingEngine
+
+
+def main():
+    cfg = configs.get_smoke("paper_consumer")
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+
+    def make_engine():
+        return ServingEngine(cfg, params, num_slots=2, max_seq=128)
+
+    with tempfile.TemporaryDirectory() as reg:
+        r = run_migration_experiment(
+            "ms2m_individual", message_rate=3.0, registry_root=reg,
+            worker_factory=make_engine, seed=0, processing_ms=120.0,
+            t_migrate=6.0, settle_time=3.0)
+    print(f"[demo] engine migration: migration_time={r.migration_time:.2f}s "
+          f"downtime={r.downtime:.2f}s")
+    print(f"[demo] requests served by target engine: "
+          f"{r.processed_by_target}")
+    print(f"[demo] migrated engine state verified: {r.verified}")
+    print(f"[demo] image: wrote {r.report.image_written_bytes/1e6:.2f}MB "
+          f"(KV slots + slot table)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.broker.broker import Broker, Message, MessageQueue  # noqa: F401

@@ -1,0 +1,115 @@
+"""In-process message broker with MS2M's secondary-queue semantics.
+
+RabbitMQ analogue (the paper's inter-service fabric), as a library:
+  * named FIFO queues with monotonically increasing per-queue message ids
+    (the id order is what makes replay well-defined);
+  * *secondary queues*: ``attach_secondary(primary)`` mirrors every publish
+    on the primary into a migration buffer from that instant — the MS2M
+    accumulation mechanism (paper §II, §III-B);
+  * consumer waiting via sim Conditions (no busy polling);
+  * per-instance dedicated queues for StatefulSet workers (paper §III-C).
+
+The broker is deliberately time-free: all timing lives in the cluster
+runtime; the broker only orders and stores.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import TYPE_CHECKING, Any, Callable, Dict, List, Optional
+
+if TYPE_CHECKING:  # annotation-only: avoids the broker <-> cluster cycle
+    from repro.cluster.sim import Condition, Sim
+
+
+@dataclasses.dataclass
+class Message:
+    msg_id: int
+    payload: Any
+    publish_time: float
+
+
+class MessageQueue:
+    def __init__(self, name: str, sim: Sim):
+        self.name = name
+        self.sim = sim
+        self._items: deque = deque()
+        self._next_id = itertools.count()
+        self._not_empty: Optional[Condition] = None
+        self.total_published = 0
+
+    # publishing ---------------------------------------------------------
+    def publish(self, payload: Any) -> Message:
+        msg = Message(next(self._next_id), payload, self.sim.now)
+        self._push(msg)
+        return msg
+
+    def _push(self, msg: Message):
+        self._items.append(msg)
+        self.total_published += 1
+        if self._not_empty is not None:
+            cond, self._not_empty = self._not_empty, None
+            cond.trigger()
+
+    # consuming ----------------------------------------------------------
+    def try_get(self) -> Optional[Message]:
+        return self._items.popleft() if self._items else None
+
+    def peek_last_id(self) -> int:
+        """Highest id ever published (-1 if none)."""
+        return self.total_published - 1 if self.total_published else -1
+
+    def wait_not_empty(self) -> Condition:
+        if self._items:
+            done = self.sim.condition()
+            done.trigger()
+            return done
+        if self._not_empty is None:
+            self._not_empty = self.sim.condition(f"{self.name}:not_empty")
+        return self._not_empty
+
+    def depth(self) -> int:
+        return len(self._items)
+
+    def requeue_front(self, msg: Message):
+        self._items.appendleft(msg)
+
+
+class Broker:
+    def __init__(self, sim: Sim):
+        self.sim = sim
+        self.queues: Dict[str, MessageQueue] = {}
+        self._mirrors: Dict[str, List[str]] = {}
+
+    def declare_queue(self, name: str) -> MessageQueue:
+        if name not in self.queues:
+            self.queues[name] = MessageQueue(name, self.sim)
+            self._mirrors.setdefault(name, [])
+        return self.queues[name]
+
+    def publish(self, queue: str, payload: Any) -> Message:
+        msg = self.queues[queue].publish(payload)
+        for mirror in self._mirrors.get(queue, []):
+            # mirrored copy keeps the primary's message id (replay identity)
+            self.queues[mirror]._push(
+                Message(msg.msg_id, payload, self.sim.now))
+        return msg
+
+    # MS2M secondary queues ------------------------------------------------
+    def attach_secondary(self, primary: str, name: Optional[str] = None) -> MessageQueue:
+        """Mirror all *future* publishes on ``primary`` into a new queue."""
+        sec_name = name or f"{primary}.secondary"
+        sec = self.declare_queue(sec_name)
+        self._mirrors[primary].append(sec_name)
+        return sec
+
+    def detach_secondary(self, primary: str, sec_name: str):
+        self._mirrors[primary].remove(sec_name)
+
+    def delete_queue(self, name: str):
+        self.queues.pop(name, None)
+        self._mirrors.pop(name, None)
+        for mirrors in self._mirrors.values():
+            if name in mirrors:
+                mirrors.remove(name)

@@ -1,0 +1,6 @@
+from repro.checkpoint.registry import (  # noqa: F401
+    ChunkStore,
+    Registry,
+    PushReport,
+)
+from repro.checkpoint.checkpointer import Checkpointer  # noqa: F401

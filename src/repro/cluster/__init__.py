@@ -1,0 +1,8 @@
+from repro.cluster.sim import Sim, Condition  # noqa: F401
+from repro.cluster.cluster import (  # noqa: F401
+    APIServer,
+    Cluster,
+    Node,
+    Pod,
+    TimingConstants,
+)

@@ -1,0 +1,283 @@
+"""Virtual-time Kubernetes-like cluster runtime.
+
+Maps the paper's actors onto simulation objects:
+  * ``Node`` — worker machine hosting Pods (kill-able: failure injection);
+  * ``Pod``  — one consumer worker + its run-loop process;
+  * ``APIServer`` — the control-plane facade the Migration Manager talks
+    to: pod lifecycle, FCC checkpointing, image build/push/pull/restore.
+    All infra operations are generator sub-processes charging calibrated
+    virtual-time constants plus *real* registry byte counts / bandwidth;
+  * ``StatefulSetController`` — sticky identity: a named replica's new Pod
+    cannot be created until the old one is fully deleted (identity release),
+    which is exactly why MS2M-for-StatefulSet must stop-then-replay.
+  * heartbeat failure detector + reconciliation (checkpoint/restart FT path).
+
+Calibration: constants default to values fitted to the paper's measured
+sub-process distribution (Figs 5-14); benchmarks/constants.py documents the
+derivation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Generator, List, Optional
+
+from repro.broker.broker import Broker, MessageQueue
+from repro.checkpoint.registry import Registry
+from repro.cluster.sim import Condition, Sim
+
+
+@dataclasses.dataclass
+class TimingConstants:
+    """Virtual-time costs of infra sub-processes (seconds).
+
+    Fitted so stop-and-copy totals ~49s (paper Fig. 5) with the paper's
+    sub-process proportions; transfer terms add real_bytes / bandwidth.
+    """
+
+    checkpoint_s: float = 8.0          # FCC/CRIU dump of the pod
+    image_build_s: float = 11.0        # buildah OCI image assembly
+    push_base_s: float = 6.0           # registry round-trips
+    pull_base_s: float = 5.0
+    registry_bw_Bps: float = 200e6     # artifact registry bandwidth
+    restore_s: float = 13.0            # CRIU restore into a fresh container
+    pod_create_s: float = 3.0          # scheduling + sandbox start
+    pod_delete_s: float = 2.0          # SIGTERM + teardown
+    sts_identity_release_s: float = 8.0  # StatefulSet graceful identity release
+    route_switch_s: float = 0.9        # consumer rebind / traffic redirect
+    cutover_coord_s: float = 0.5       # pause coordination during cutover
+    processing_ms: float = 50.0        # per-message service time (paper: 50ms)
+    heartbeat_interval_s: float = 2.0
+    heartbeat_timeout_s: float = 6.0
+
+
+class Node:
+    def __init__(self, name: str):
+        self.name = name
+        self.alive = True
+        self.pods: Dict[str, "Pod"] = {}
+        self.last_heartbeat = 0.0
+
+
+class Pod:
+    """A consumer worker plus its service loop."""
+
+    def __init__(self, name: str, node: Node, worker, queue: MessageQueue,
+                 sim: Sim, timings: TimingConstants,
+                 processing_ms: Optional[float] = None):
+        self.name = name
+        self.node = node
+        self.worker = worker
+        self.queue = queue
+        self.sim = sim
+        self.timings = timings
+        self.processing_ms = (timings.processing_ms
+                              if processing_ms is None else processing_ms)
+        self.serving = False
+        self.deleted = False
+        self.paused = False
+        self.service_log: List[tuple] = []  # (virtual_time, msg_id)
+        self.on_processed: Optional[Callable] = None
+        self._loop_started = False
+        self._wake: Optional[Condition] = None
+
+    # -- service loop ---------------------------------------------------------
+    def start(self):
+        self.serving = True
+        if not self._loop_started:
+            self._loop_started = True
+            self.sim.process(self._run(), name=f"pod:{self.name}")
+
+    def pause(self):
+        self.paused = True
+        self.serving = False
+
+    def resume(self):
+        self.paused = False
+        self.serving = True
+
+    def stop(self):
+        self.deleted = True
+        self.serving = False
+        self.wake()
+
+    def wake(self):
+        """Unblock the loop (e.g. after a queue switch)."""
+        if self._wake is not None:
+            cond, self._wake = self._wake, None
+            cond.trigger()
+
+    def _run(self) -> Generator:
+        while not self.deleted:
+            if self.paused or not self.node.alive:
+                yield 0.05
+                continue
+            msg = self.queue.try_get()
+            if msg is None:
+                self._wake = self.sim.condition(f"{self.name}:wake")
+                yield self.sim.any_of(self.queue.wait_not_empty(), self._wake)
+                continue
+            # at-least-once dedup guard: ids are totally ordered, so a
+            # message already folded into the state is skipped for free
+            skip_until = getattr(self.worker, "skip_until", -1)
+            if msg.msg_id <= max(skip_until, self.worker.last_msg_id):
+                continue
+            yield self.processing_ms / 1000.0  # service time (virtual)
+            if self.deleted or self.paused:
+                # interrupted mid-service: message returns to the queue
+                self.queue.requeue_front(msg)
+                continue
+            self.worker.process(msg)  # real JAX state update
+            self.service_log.append((self.sim.now, msg.msg_id))
+            if self.on_processed:
+                self.on_processed(self, msg)
+
+
+class StatefulSetController:
+    """Sticky identity bookkeeping: replica name -> live pod (at most one)."""
+
+    def __init__(self):
+        self.identities: Dict[str, Optional[str]] = {}
+
+    def claim(self, replica: str, pod_name: str):
+        if self.identities.get(replica) is not None:
+            raise RuntimeError(
+                f"StatefulSet identity {replica} still held by "
+                f"{self.identities[replica]}")
+        self.identities[replica] = pod_name
+
+    def release(self, replica: str):
+        self.identities[replica] = None
+
+
+class APIServer:
+    """Control-plane facade: what the Migration Manager calls."""
+
+    def __init__(self, sim: Sim, broker: Broker, registry: Registry,
+                 timings: TimingConstants):
+        self.sim = sim
+        self.broker = broker
+        self.registry = registry
+        self.timings = timings
+        self.nodes: Dict[str, Node] = {}
+        self.pods: Dict[str, Pod] = {}
+        self.statefulsets = StatefulSetController()
+        self.events: List[tuple] = []
+
+    def _log(self, kind: str, **kw):
+        self.events.append((self.sim.now, kind, kw))
+
+    # -- topology --------------------------------------------------------------
+    def add_node(self, name: str) -> Node:
+        node = Node(name)
+        self.nodes[name] = node
+        return node
+
+    def kill_node(self, name: str):
+        """Failure injection: every pod on the node dies instantly."""
+        node = self.nodes[name]
+        node.alive = False
+        for pod in list(node.pods.values()):
+            pod.stop()
+            self.pods.pop(pod.name, None)
+        node.pods.clear()
+        self._log("node_killed", node=name)
+
+    # -- pod lifecycle (generator sub-processes) --------------------------------
+    def create_pod(self, name: str, node_name: str, worker,
+                   queue: MessageQueue, *, statefulset_identity=None,
+                   processing_ms=None) -> Generator:
+        t = self.timings
+        yield t.pod_create_s
+        node = self.nodes[node_name]
+        if not node.alive:
+            raise RuntimeError(f"node {node_name} is dead")
+        if statefulset_identity is not None:
+            self.statefulsets.claim(statefulset_identity, name)
+        pod = Pod(name, node, worker, queue, self.sim, t,
+                  processing_ms=processing_ms)
+        node.pods[name] = pod
+        self.pods[name] = pod
+        self._log("pod_created", pod=name, node=node_name)
+        return pod
+
+    def delete_pod(self, name: str, *, statefulset_identity=None,
+                   graceful: bool = True) -> Generator:
+        t = self.timings
+        pod = self.pods.get(name)
+        if pod is not None:
+            pod.stop()
+        yield t.pod_delete_s if graceful else 0.1
+        if statefulset_identity is not None:
+            yield t.sts_identity_release_s
+            self.statefulsets.release(statefulset_identity)
+        if pod is not None:
+            pod.node.pods.pop(name, None)
+            self.pods.pop(name, None)
+        self._log("pod_deleted", pod=name)
+
+    # -- FCC: checkpoint / image / restore --------------------------------------
+    def checkpoint_pod(self, pod: Pod) -> Generator:
+        """FCC dump: snapshot the worker's state tree (real pytree)."""
+        t = self.timings
+        yield t.checkpoint_s
+        state = pod.worker.state_tree()
+        marker = pod.worker.last_msg_id
+        self._log("checkpointed", pod=pod.name, last_msg_id=marker)
+        return {"state": state, "last_msg_id": marker}
+
+    def build_and_push_image(self, checkpoint: dict, tag: str) -> Generator:
+        """Image Manager: OCI assembly + registry push (real bytes)."""
+        t = self.timings
+        yield t.image_build_s
+        report = self.registry.push_image(
+            {"state": checkpoint["state"]},
+            meta={"last_msg_id": int(checkpoint["last_msg_id"]), "tag": tag},
+            tag=tag,
+        )
+        yield t.push_base_s + report.written_bytes / t.registry_bw_Bps
+        self._log("image_pushed", tag=tag, image_id=report.image_id,
+                  written=report.written_bytes, deduped=report.deduped_bytes)
+        return report
+
+    def pull_and_restore(self, image_id: str, worker) -> Generator:
+        """Target node: pull from registry, restore worker state."""
+        t = self.timings
+        trees, pulled = self.registry.pull_image(image_id)
+        yield t.pull_base_s + pulled / t.registry_bw_Bps
+        yield t.restore_s
+        worker.load_state(trees["state"])
+        meta = self.registry.image_meta(image_id)
+        self._log("restored", image_id=image_id,
+                  last_msg_id=meta.get("last_msg_id"))
+        return meta
+
+    # -- failure detection / reconciliation -------------------------------------
+    def start_heartbeats(self, on_node_dead: Callable[[str], None]):
+        t = self.timings
+
+        def monitor() -> Generator:
+            while True:
+                yield t.heartbeat_interval_s
+                for node in self.nodes.values():
+                    if node.alive:
+                        node.last_heartbeat = self.sim.now
+                    elif self.sim.now - node.last_heartbeat > t.heartbeat_timeout_s:
+                        node.last_heartbeat = float("inf")  # fire once
+                        on_node_dead(node.name)
+
+        self.sim.process(monitor(), name="heartbeat-monitor")
+
+
+class Cluster:
+    """Convenience bundle: sim + broker + registry + api server."""
+
+    def __init__(self, registry_root: str,
+                 timings: Optional[TimingConstants] = None,
+                 num_nodes: int = 3):
+        self.sim = Sim()
+        self.broker = Broker(self.sim)
+        self.registry = Registry(registry_root)
+        self.timings = timings or TimingConstants()
+        self.api = APIServer(self.sim, self.broker, self.registry, self.timings)
+        for i in range(num_nodes):
+            self.api.add_node(f"node{i}")

@@ -1,0 +1,126 @@
+"""Deterministic discrete-event kernel with generator processes.
+
+Processes are Python generators that ``yield`` either a float delay or a
+``Condition``; the kernel advances a virtual clock.  All service times are
+charged to the virtual clock (so benchmarks are deterministic and fast)
+while *real* JAX compute runs inside the handlers (so migrated state is
+real, bit-exactly checkable, and measured step times can calibrate the
+clock constants).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Any, Callable, Generator, List, Optional
+
+
+class Condition:
+    """A waitable event; processes yield it to block until triggered."""
+
+    def __init__(self, sim: "Sim", name: str = ""):
+        self.sim = sim
+        self.name = name
+        self.triggered = False
+        self.value: Any = None
+        self._waiters: List["_Proc"] = []
+        self._callbacks: List[Callable] = []
+
+    def on_trigger(self, fn: Callable):
+        if self.triggered:
+            fn(self.value)
+        else:
+            self._callbacks.append(fn)
+
+    def trigger(self, value: Any = None):
+        if self.triggered:
+            return
+        self.triggered = True
+        self.value = value
+        for proc in self._waiters:
+            self.sim._ready(proc, value)
+        self._waiters.clear()
+        for fn in self._callbacks:
+            fn(value)
+        self._callbacks.clear()
+
+
+class _Proc:
+    def __init__(self, gen: Generator, name: str):
+        self.gen = gen
+        self.name = name
+        self.done = Condition.__new__(Condition)  # filled by Sim.process
+
+
+class Interrupt(Exception):
+    pass
+
+
+class Sim:
+    def __init__(self):
+        self.now = 0.0
+        self._heap: list = []
+        self._counter = itertools.count()
+
+    # -- scheduling ----------------------------------------------------------
+    def _push(self, t: float, fn: Callable, arg: Any = None):
+        heapq.heappush(self._heap, (t, next(self._counter), fn, arg))
+
+    def _ready(self, proc: _Proc, value: Any = None):
+        self._push(self.now, lambda v: self._step(proc, v), value)
+
+    def condition(self, name: str = "") -> Condition:
+        return Condition(self, name)
+
+    def any_of(self, *conds: Condition, name: str = "any") -> Condition:
+        """Condition triggering when the first of ``conds`` triggers."""
+        out = Condition(self, name)
+        for c in conds:
+            c.on_trigger(out.trigger)
+        return out
+
+    def process(self, gen: Generator, name: str = "") -> Condition:
+        """Start a generator process; returns its completion Condition."""
+        proc = _Proc(gen, name)
+        done = Condition(self, f"done:{name}")
+        proc.done = done
+        self._push(self.now, lambda v: self._step(proc, v), None)
+        return done
+
+    def call_at(self, t: float, fn: Callable):
+        self._push(max(t, self.now), lambda _: fn(), None)
+
+    def call_after(self, delay: float, fn: Callable):
+        self.call_at(self.now + delay, fn)
+
+    # -- process stepping ------------------------------------------------------
+    def _step(self, proc: _Proc, send_value: Any):
+        try:
+            yielded = proc.gen.send(send_value)
+        except StopIteration as stop:
+            proc.done.trigger(stop.value)
+            return
+        if isinstance(yielded, Condition):
+            if yielded.triggered:
+                self._ready(proc, yielded.value)
+            else:
+                yielded._waiters.append(proc)
+        elif isinstance(yielded, (int, float)):
+            self._push(self.now + float(yielded), lambda v: self._step(proc, v), None)
+        else:
+            raise TypeError(f"process {proc.name} yielded {type(yielded)}")
+
+    # -- run -------------------------------------------------------------------
+    def run(self, until: Optional[float] = None,
+            stop_when: Optional[Condition] = None):
+        while self._heap:
+            if stop_when is not None and stop_when.triggered:
+                return
+            t, _, fn, arg = self._heap[0]
+            if until is not None and t > until:
+                self.now = until
+                return
+            heapq.heappop(self._heap)
+            self.now = t
+            fn(arg)
+        if until is not None:
+            self.now = max(self.now, until)

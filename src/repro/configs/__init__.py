@@ -1,0 +1,48 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(name)`` returns the full published config; ``get_smoke(name)``
+returns a reduced same-family config for CPU smoke tests (small dims, same
+pattern).  The full configs are only ever lowered via ShapeDtypeStructs
+(launch/dryrun.py) — never allocated on this host.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+ARCHS: List[str] = [
+    "codeqwen1_5_7b",
+    "gemma3_4b",
+    "chatglm3_6b",
+    "smollm_360m",
+    "whisper_large_v3",
+    "llama4_maverick_400b_a17b",
+    "granite_moe_1b_a400m",
+    "recurrentgemma_2b",
+    "qwen2_vl_72b",
+    "xlstm_350m",
+    "paper_consumer",  # the paper's own evaluation microservice model
+]
+
+_ALIASES = {a.replace("_", "-"): a for a in ARCHS}
+
+
+def _module(name: str):
+    name = _ALIASES.get(name, name)
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get_config(name: str) -> ModelConfig:
+    return _module(name).CONFIG
+
+
+def get_smoke(name: str) -> ModelConfig:
+    return _module(name).smoke_config()
+
+
+def list_archs(include_paper: bool = False) -> List[str]:
+    archs = [a for a in ARCHS if a != "paper_consumer"]
+    return ARCHS if include_paper else archs

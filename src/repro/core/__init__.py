@@ -1,0 +1,19 @@
+# The paper's primary contribution: MS2M live stateful migration integrated
+# with the cluster control plane, the Threshold-Based Cutoff Mechanism
+# (queuing-theory bound, Eq. 5), and FCC-style registry checkpoint images —
+# adapted from Kubernetes/CRIU to a JAX multi-pod fleet (see DESIGN.md §2).
+from repro.core.consumer import StatefulConsumer, measure_replay_speedup  # noqa: F401
+from repro.core.cutoff import (  # noqa: F401
+    CutoffController,
+    batched_cutoff_threshold,
+    cutoff_threshold,
+    expected_catchup_time,
+    replay_time_bound,
+)
+from repro.core.migration import MigrationManager, MigrationReport  # noqa: F401
+from repro.core.workload import (  # noqa: F401
+    ExperimentResult,
+    HashConsumer,
+    make_jax_worker_factory,
+    run_migration_experiment,
+)

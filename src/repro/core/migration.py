@@ -1,0 +1,344 @@
+"""MS2M migration strategies (paper §III, Figs. 1-4) as cluster processes.
+
+Four strategies, all driven by the MigrationManager through the APIServer:
+
+  stop_and_copy      — UMS-style baseline: pause -> checkpoint -> image ->
+                       push -> pull -> restore -> switch.  Downtime == the
+                       whole migration (paper Fig. 5).
+  ms2m_individual    — Fig. 2: secondary queue attached, source keeps
+                       serving; target restores from the registry image and
+                       replays the mirrored log until *synchronized*, then a
+                       short cutover.  Downtime == cutover only.
+  ms2m_cutoff        — Fig. 3: same, plus the Threshold-Based Cutoff
+                       Mechanism: when T_accum exceeds Eq. 5's T_cutoff, the
+                       source is stopped and the remaining (bounded) log is
+                       replayed; bounded replay <= T_replay_max by
+                       construction.
+  ms2m_statefulset   — Fig. 4: sticky identity forces stop-before-create:
+                       checkpoint+push live, then stop source, release
+                       identity, create target, restore, replay to the
+                       *cutoff message id* (source's last processed), switch.
+
+Replay correctness: message ids are totally ordered per queue; the target
+skips ids <= the checkpoint marker and replays the rest through the same
+jitted fold the source used => bit-exact state (verified by tests and by
+every benchmark run via ``verify_against_reference``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Generator, List, Optional
+
+from repro.cluster.cluster import APIServer, Pod, TimingConstants
+from repro.cluster.sim import Condition, Sim
+from repro.core.cutoff import CutoffController
+
+
+@dataclasses.dataclass
+class MigrationReport:
+    strategy: str
+    t_start: float
+    t_end: float = 0.0
+    downtime: float = 0.0
+    phases: Dict[str, float] = dataclasses.field(default_factory=dict)
+    checkpoint_marker: int = -1
+    cutoff_id: Optional[int] = None
+    cutoff_fired: bool = False
+    replayed_messages: int = 0
+    image_id: str = ""
+    image_written_bytes: int = 0
+    image_deduped_bytes: int = 0
+    state_verified: Optional[bool] = None
+
+    @property
+    def migration_time(self) -> float:
+        return self.t_end - self.t_start
+
+
+class MigrationManager:
+    """The paper's Migration Manager: deployed 'on the master node', talks
+    to the API server only."""
+
+    def __init__(self, api: APIServer, make_worker: Callable[[], Any],
+                 primary_queue: str,
+                 cutoff: Optional[CutoffController] = None,
+                 batched_replay: bool = False,
+                 replay_speedup: float = 1.0):
+        self.api = api
+        self.sim = api.sim
+        self.broker = api.broker
+        self.make_worker = make_worker
+        self.primary_queue = primary_queue
+        self.cutoff = cutoff
+        self.batched_replay = batched_replay
+        self.replay_speedup = max(1.0, replay_speedup)
+        self._n = 0
+
+    # ---------------------------------------------------------------------
+    def migrate(self, strategy: str, source: Pod, target_node: str,
+                statefulset_identity: Optional[str] = None) -> Condition:
+        gen = {
+            "stop_and_copy": self._stop_and_copy,
+            "ms2m_individual": self._ms2m_individual,
+            "ms2m_cutoff": self._ms2m_cutoff,
+            "ms2m_statefulset": self._ms2m_statefulset,
+        }[strategy]
+        self._n += 1
+        return self.sim.process(
+            gen(source, target_node, statefulset_identity),
+            name=f"migration:{strategy}:{self._n}",
+        )
+
+    # -- helpers -------------------------------------------------------------
+    def _phase(self, report: MigrationReport, name: str, t0: float):
+        report.phases[name] = report.phases.get(name, 0.0) + (self.sim.now - t0)
+
+    def _sync_condition(self, target_pod: Pod, source_pod: Pod,
+                        secondary) -> Condition:
+        """Triggered when target has replayed everything the source has
+        processed and the mirror buffer is empty."""
+        cond = self.sim.condition("synced")
+
+        def check(*_):
+            if (secondary.depth() == 0
+                    and target_pod.worker.last_msg_id >= source_pod.worker.last_msg_id):
+                cond.trigger()
+
+        target_pod.on_processed = check
+        prev = source_pod.on_processed
+
+        def chained(pod, msg):
+            if prev:
+                prev(pod, msg)
+            check()
+
+        source_pod.on_processed = chained
+        check()
+        return cond
+
+    def _drain_condition(self, target_pod: Pod, up_to_id: int,
+                         secondary) -> Condition:
+        """Triggered when target has replayed ids <= up_to_id."""
+        cond = self.sim.condition("drained")
+
+        def check(*_):
+            if target_pod.worker.last_msg_id >= up_to_id or secondary.depth() == 0:
+                cond.trigger()
+
+        target_pod.on_processed = check
+        check()
+        return cond
+
+    def _switch_to_primary(self, target_pod: Pod, secondary_name: str):
+        self.broker.detach_secondary(self.primary_queue, secondary_name)
+        target_pod.queue = self.broker.queues[self.primary_queue]
+        target_pod.wake()  # unblock if it was waiting on the secondary
+
+    # ---------------------------------------------------------------------
+    # Strategy 0: stop-and-copy (baseline; paper Fig. 5)
+    # ---------------------------------------------------------------------
+    def _stop_and_copy(self, source: Pod, target_node: str,
+                       _identity=None) -> Generator:
+        t = self.api.timings
+        rep = MigrationReport("stop_and_copy", self.sim.now)
+        down0 = self.sim.now
+        source.pause()  # downtime starts immediately
+
+        t0 = self.sim.now
+        ckpt = yield from self.api.checkpoint_pod(source)
+        rep.checkpoint_marker = ckpt["last_msg_id"]
+        self._phase(rep, "checkpoint", t0)
+
+        t0 = self.sim.now
+        push = yield from self.api.build_and_push_image(
+            ckpt, f"sac-{self._n}")
+        rep.image_id = push.image_id
+        rep.image_written_bytes = push.written_bytes
+        rep.image_deduped_bytes = push.deduped_bytes
+        self._phase(rep, "image_build_push", t0)
+
+        t0 = self.sim.now
+        worker = self.make_worker()
+        target = yield from self.api.create_pod(
+            f"{source.name}-target-{self._n}", target_node, worker,
+            self.broker.queues[self.primary_queue],
+            processing_ms=source.processing_ms)
+        yield from self.api.pull_and_restore(push.image_id, worker)
+        self._phase(rep, "service_restoration", t0)
+
+        t0 = self.sim.now
+        yield from self.api.delete_pod(source.name)
+        yield t.route_switch_s
+        target.start()
+        self._phase(rep, "cutover", t0)
+
+        rep.downtime = self.sim.now - down0
+        rep.t_end = self.sim.now
+        return rep, target
+
+    # ---------------------------------------------------------------------
+    # Strategy 1: MS2M for individual pods (paper Fig. 2)
+    # ---------------------------------------------------------------------
+    def _ms2m_individual(self, source: Pod, target_node: str,
+                         _identity=None, *, deadline: Optional[float] = None
+                         ) -> Generator:
+        t = self.api.timings
+        strategies = "ms2m_cutoff" if deadline is not None else "ms2m_individual"
+        rep = MigrationReport(strategies, self.sim.now)
+        sec = self.broker.attach_secondary(self.primary_queue,
+                                           f"{self.primary_queue}.sec{self._n}")
+        accum_started = self.sim.now
+
+        # Threshold-Based Cutoff (Fig. 3): when T_accum hits Eq. 5's bound,
+        # the SOURCE STOPS — even mid-transfer — capping the replay log at
+        # N <= λ·T_cutoff so that T_replay <= T_replay_max by construction.
+        cutoff_state: dict = {"fired": False, "pause_time": None, "id": None}
+        fired_cond = self.sim.condition("cutoff-fired")
+        if deadline is not None:
+            def _fire():
+                if not cutoff_state["fired"] and not source.paused:
+                    cutoff_state["fired"] = True
+                    cutoff_state["pause_time"] = self.sim.now
+                    source.pause()
+                    cutoff_state["id"] = source.worker.last_msg_id
+                    fired_cond.trigger()
+
+            self.sim.call_at(accum_started + deadline, _fire)
+
+        t0 = self.sim.now
+        ckpt = yield from self.api.checkpoint_pod(source)  # source keeps serving
+        rep.checkpoint_marker = ckpt["last_msg_id"]
+        self._phase(rep, "checkpoint", t0)
+
+        t0 = self.sim.now
+        push = yield from self.api.build_and_push_image(ckpt, f"ms2m-{self._n}")
+        rep.image_id = push.image_id
+        rep.image_written_bytes = push.written_bytes
+        rep.image_deduped_bytes = push.deduped_bytes
+        self._phase(rep, "image_build_push", t0)
+
+        t0 = self.sim.now
+        worker = self.make_worker()
+        worker.skip_until = rep.checkpoint_marker
+        replay_ms = source.processing_ms / self.replay_speedup
+        target = yield from self.api.create_pod(
+            f"{source.name}-target-{self._n}", target_node, worker, sec,
+            processing_ms=replay_ms)
+        yield from self.api.pull_and_restore(push.image_id, worker)
+        self._phase(rep, "service_restoration", t0)
+
+        # -- catch-up: target replays the mirror while source keeps serving --
+        t0 = self.sim.now
+        base_processed = worker.n_processed
+        target.start()
+        if cutoff_state["fired"]:
+            # source already stopped (deadline expired mid-transfer):
+            # bounded replay to the frozen cutoff id
+            yield self._drain_condition(target, cutoff_state["id"], sec)
+        else:
+            synced = self._sync_condition(target, source, sec)
+            yield self.sim.any_of(synced, fired_cond) if deadline is not None \
+                else synced
+            if cutoff_state["fired"] and not synced.triggered:
+                # fired mid-catch-up: bounded drain to the frozen id
+                yield self._drain_condition(target, cutoff_state["id"], sec)
+        self._phase(rep, "message_replay", t0)
+
+        # -- cutover ----------------------------------------------------------
+        t0 = self.sim.now
+        if cutoff_state["fired"]:
+            rep.cutoff_fired = True
+            rep.cutoff_id = cutoff_state["id"]
+            down0 = cutoff_state["pause_time"]  # downtime began at the pause
+        else:
+            down0 = self.sim.now
+            source.pause()
+        yield t.cutover_coord_s
+        # drain any in-flight mirrored messages up to the source's final state
+        yield self._drain_condition(target, source.worker.last_msg_id, sec)
+        self._switch_to_primary(target, sec.name)
+        target.processing_ms = source.processing_ms  # back to service rate
+        yield t.route_switch_s
+        rep.downtime = self.sim.now - down0
+        self._phase(rep, "cutover", t0)
+
+        t0 = self.sim.now
+        yield from self.api.delete_pod(source.name)
+        self._phase(rep, "source_teardown", t0)
+
+        rep.replayed_messages = worker.n_processed - base_processed
+        rep.t_end = self.sim.now
+        return rep, target
+
+    # ---------------------------------------------------------------------
+    # Strategy 2: MS2M + Threshold-Based Cutoff (paper Fig. 3, Eq. 5)
+    # ---------------------------------------------------------------------
+    def _ms2m_cutoff(self, source: Pod, target_node: str,
+                     _identity=None) -> Generator:
+        assert self.cutoff is not None, "ms2m_cutoff needs a CutoffController"
+        deadline = self.cutoff.threshold()
+        result = yield from self._ms2m_individual(
+            source, target_node, deadline=deadline)
+        return result
+
+    # ---------------------------------------------------------------------
+    # Strategy 3: MS2M for StatefulSet pods (paper Fig. 4)
+    # ---------------------------------------------------------------------
+    def _ms2m_statefulset(self, source: Pod, target_node: str,
+                          identity: Optional[str] = None) -> Generator:
+        t = self.api.timings
+        identity = identity or f"sts-{source.name}"
+        rep = MigrationReport("ms2m_statefulset", self.sim.now)
+        sec = self.broker.attach_secondary(self.primary_queue,
+                                           f"{self.primary_queue}.sec{self._n}")
+
+        t0 = self.sim.now
+        ckpt = yield from self.api.checkpoint_pod(source)  # still serving
+        rep.checkpoint_marker = ckpt["last_msg_id"]
+        self._phase(rep, "checkpoint", t0)
+
+        t0 = self.sim.now
+        push = yield from self.api.build_and_push_image(ckpt, f"sts-{self._n}")
+        rep.image_id = push.image_id
+        rep.image_written_bytes = push.written_bytes
+        rep.image_deduped_bytes = push.deduped_bytes
+        self._phase(rep, "image_build_push", t0)
+
+        # -- stop source after the checkpoint-transfer phase (Fig. 4) --------
+        down0 = self.sim.now
+        source.pause()
+        rep.cutoff_id = source.worker.last_msg_id  # the cutoff message id
+
+        t0 = self.sim.now
+        yield from self.api.delete_pod(source.name,
+                                       statefulset_identity=identity)
+        self._phase(rep, "identity_release", t0)
+
+        t0 = self.sim.now
+        worker = self.make_worker()
+        worker.skip_until = rep.checkpoint_marker
+        replay_ms = source.processing_ms / self.replay_speedup
+        target = yield from self.api.create_pod(
+            f"{source.name}-target-{self._n}", target_node, worker, sec,
+            statefulset_identity=identity, processing_ms=replay_ms)
+        yield from self.api.pull_and_restore(push.image_id, worker)
+        self._phase(rep, "service_restoration", t0)
+
+        # -- replay up to the cutoff message id -------------------------------
+        t0 = self.sim.now
+        base_processed = worker.n_processed
+        target.start()
+        drained = self._drain_condition(target, rep.cutoff_id, sec)
+        yield drained
+        self._phase(rep, "message_replay", t0)
+
+        t0 = self.sim.now
+        self._switch_to_primary(target, sec.name)
+        target.processing_ms = source.processing_ms
+        yield t.route_switch_s
+        rep.downtime = self.sim.now - down0
+        self._phase(rep, "cutover", t0)
+
+        rep.replayed_messages = worker.n_processed - base_processed
+        rep.t_end = self.sim.now
+        return rep, target

@@ -1,0 +1,92 @@
+"""MS2M applied to *training* workers.
+
+The worker's migratable state is (params, opt_state, step); the "message"
+is a batch id.  Because the data pipeline is a pure function of
+(seed, step) and the train step is jitted, the fold
+    state_{s+1} = train_step(state_s, batch(s))
+is deterministic — so a training worker migrates exactly like a serving
+replica: checkpoint image + batch-id journal replay.  This is the FT story
+at 1000+ nodes: preemption or straggling triggers a live migration instead
+of a fleet-wide restart.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import DataConfig, SyntheticTokenDataset
+from repro.models import transformer as T
+from repro.models.common import split_params
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro.train import step as steplib
+
+
+class TrainerWorker:
+    """Processes batch-id messages; state = (params, opt, step)."""
+
+    def __init__(self, cfg: ModelConfig, tcfg: steplib.TrainStepConfig,
+                 dcfg: DataConfig, name: str = "trainer"):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.dcfg = dcfg
+        self.name = name
+        self.ds = SyntheticTokenDataset(dcfg)
+        params, _ = split_params(T.init_lm(jax.random.PRNGKey(0), cfg))
+        self.params = params
+        self.opt_state = adamw.adamw_init(params, tcfg.opt)
+        self.step = 0
+        self.last_msg_id = -1
+        self.n_processed = 0
+        self.skip_until = -1
+        self.last_loss = float("nan")
+        self._fn = jax.jit(steplib.build_train_step(cfg, tcfg),
+                           donate_argnums=(0, 1))
+
+    def process(self, msg) -> None:
+        batch_id = int(msg.payload.get("batch_id", msg.payload.get("token")))
+        batch = jax.tree.map(jnp.asarray, self.ds.batch(batch_id))
+        self.params, self.opt_state, metrics = self._fn(
+            self.params, self.opt_state, batch,
+            jnp.asarray(self.step, jnp.int32))
+        self.step += 1
+        self.last_loss = float(metrics["loss"])
+        self.last_msg_id = msg.msg_id
+        self.n_processed += 1
+
+    def state_tree(self) -> Dict[str, Any]:
+        # snapshot to host memory: the train step DONATES its input buffers,
+        # so device arrays referenced here would be invalidated by the next
+        # step (CRIU would likewise dump a point-in-time copy)
+        host = lambda t: jax.tree.map(lambda x: np.array(x), t)
+        return {
+            "params": host(self.params),
+            "opt": host(self.opt_state),
+            "scalars": {
+                "step": np.int64(self.step),
+                "last_msg_id": np.int64(self.last_msg_id),
+                "n_processed": np.int64(self.n_processed),
+            },
+        }
+
+    def load_state(self, tree: Dict[str, Any]):
+        self.params = jax.tree.map(jnp.asarray, tree["params"])
+        self.opt_state = jax.tree.map(jnp.asarray, tree["opt"])
+        self.step = int(tree["scalars"]["step"])
+        self.last_msg_id = int(tree["scalars"]["last_msg_id"])
+        self.n_processed = int(tree["scalars"]["n_processed"])
+
+    def state_equal(self, other: "TrainerWorker", exact: bool = True) -> bool:
+        if self.step != other.step or self.last_msg_id != other.last_msg_id:
+            return False
+        for a, b in zip(jax.tree.leaves(self.params),
+                        jax.tree.leaves(other.params)):
+            a, b = np.asarray(a), np.asarray(b)
+            if exact and not np.array_equal(a, b):
+                return False
+            if not exact and not np.allclose(a, b, rtol=1e-5, atol=1e-6):
+                return False
+        return True

@@ -1,0 +1,201 @@
+"""End-to-end migration experiment harness (used by benchmarks, tests and
+examples).
+
+One experiment = paper evaluation §IV-B:
+  producer --Poisson(λ)--> primary queue --> consumer pod (μ = 1/processing)
+  at t_migrate the MigrationManager runs one strategy; we record the
+  MigrationReport, then *verify* the migrated state: an independent
+  reference consumer folds the full message log 0..last_msg_id from scratch
+  and must match the target bit-exactly (allclose for batched replay).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+import jax
+
+from repro.cluster.cluster import Cluster, TimingConstants
+from repro.core.consumer import StatefulConsumer
+from repro.core.cutoff import CutoffController
+from repro.core.migration import MigrationManager, MigrationReport
+from repro import configs
+
+
+class HashConsumer:
+    """Cheap drop-in for wide sweeps: state = rolling fnv-ish hash of the
+    message log.  Still an exact fold (order-sensitive), so migration
+    correctness remains fully checkable without JAX compute."""
+
+    def __init__(self, name: str = "hash"):
+        self.digest = np.uint64(1469598103934665603)
+        self.pos = 0
+        self.last_msg_id = -1
+        self.n_processed = 0
+        self.skip_until = -1
+
+    def process(self, msg):
+        with np.errstate(over="ignore"):
+            x = np.uint64(msg.payload["token"]) ^ np.uint64(msg.msg_id + 1)
+            self.digest = np.uint64(
+                (self.digest ^ x) * np.uint64(1099511628211))
+        self.pos += 1
+        self.last_msg_id = msg.msg_id
+        self.n_processed += 1
+
+    def state_tree(self):
+        return {"digest": np.uint64(self.digest),
+                "scalars": {"pos": np.int64(self.pos),
+                            "last_msg_id": np.int64(self.last_msg_id),
+                            "n_processed": np.int64(self.n_processed)}}
+
+    def load_state(self, tree):
+        self.digest = np.uint64(tree["digest"])
+        self.pos = int(tree["scalars"]["pos"])
+        self.last_msg_id = int(tree["scalars"]["last_msg_id"])
+        self.n_processed = int(tree["scalars"]["n_processed"])
+
+    def state_equal(self, other, exact: bool = True):
+        return (self.digest == other.digest and self.pos == other.pos
+                and self.last_msg_id == other.last_msg_id)
+
+
+@dataclasses.dataclass
+class ExperimentResult:
+    report: MigrationReport
+    verified: bool
+    published: int
+    processed_by_target: int
+    lam: float
+    mu: float
+    downtime: float
+    migration_time: float
+
+    def row(self) -> Dict[str, Any]:
+        return {
+            "strategy": self.report.strategy,
+            "lam": self.lam,
+            "mu": self.mu,
+            "migration_time": round(self.migration_time, 3),
+            "downtime": round(self.downtime, 3),
+            "replayed": self.report.replayed_messages,
+            "cutoff_fired": self.report.cutoff_fired,
+            "verified": self.verified,
+            "phases": {k: round(v, 3) for k, v in self.report.phases.items()},
+            "image_written_bytes": self.report.image_written_bytes,
+            "image_deduped_bytes": self.report.image_deduped_bytes,
+        }
+
+
+def make_jax_worker_factory(max_seq: int = 512):
+    """Factory of real-JAX consumers sharing one params tree (weights are
+    immutable infrastructure; only the cache state migrates)."""
+    cfg = configs.get_config("paper_consumer")
+    params = None
+
+    def make() -> StatefulConsumer:
+        nonlocal params
+        if params is None:
+            from repro.models import transformer as T
+            params = T.init_lm(jax.random.PRNGKey(0), cfg)
+        return StatefulConsumer(cfg, params, max_seq=max_seq)
+
+    return make, cfg
+
+
+def run_migration_experiment(
+    strategy: str,
+    message_rate: float,
+    *,
+    registry_root: str,
+    processing_ms: float = 50.0,
+    t_migrate: float = 10.0,
+    t_replay_max: float = 45.0,
+    seed: int = 0,
+    timings: Optional[TimingConstants] = None,
+    worker_factory: Optional[Callable] = None,
+    batched_replay: bool = False,
+    replay_speedup: float = 1.0,
+    settle_time: float = 5.0,
+    verify: bool = True,
+) -> ExperimentResult:
+    timings = timings or TimingConstants()
+    timings = dataclasses.replace(timings, processing_ms=processing_ms)
+    cluster = Cluster(registry_root, timings=timings, num_nodes=3)
+    sim, api, broker = cluster.sim, cluster.api, cluster.broker
+    primary = broker.declare_queue("orders")
+
+    make_worker = worker_factory or (lambda: HashConsumer())
+    mu = 1000.0 / processing_ms
+
+    # -- adaptive cutoff controller (λ̂/μ̂ EWMA-estimated online) ------------
+    cutoff = CutoffController(
+        t_replay_max=t_replay_max, mu_fallback=mu, lam_fallback=message_rate,
+        batch_speedup=replay_speedup if batched_replay else 1.0)
+
+    # -- producer: Poisson(λ), deterministic --------------------------------
+    rng = np.random.default_rng(seed)
+    published: List[int] = []
+    stop_producing = {"flag": False}
+
+    def producer():
+        while not stop_producing["flag"]:
+            yield float(rng.exponential(1.0 / message_rate))
+            token = int(rng.integers(0, 2048))
+            broker.publish("orders", {"token": token})
+            published.append(token)
+            cutoff.observe_arrival(sim.now)
+
+    sim.process(producer(), name="producer")
+
+    # -- source pod -----------------------------------------------------------
+    source_worker = make_worker()
+    source_holder: dict = {}
+
+    def boot():
+        pod = yield from api.create_pod("consumer-0", "node0", source_worker,
+                                        primary)
+        pod.on_processed = lambda p, m: cutoff.observe_service(sim.now)
+        pod.start()
+        source_holder["pod"] = pod
+
+    sim.process(boot(), name="boot")
+    sim.run(until=t_migrate)
+    source = source_holder["pod"]
+
+    # -- migration -------------------------------------------------------------
+    mgr = MigrationManager(api, make_worker, "orders", cutoff=cutoff,
+                           batched_replay=batched_replay,
+                           replay_speedup=replay_speedup if batched_replay else 1.0)
+    done = mgr.migrate(strategy, source, "node1")
+    sim.run(stop_when=done)
+    report, target = done.value
+
+    # -- settle + stop ----------------------------------------------------------
+    sim.run(until=sim.now + settle_time)
+    stop_producing["flag"] = True
+    sim.run(until=sim.now + 2.0)
+
+    # -- verification: reference fold of the full log --------------------------
+    verified = True
+    if verify:
+        from repro.broker.broker import Message
+
+        ref = make_worker()
+        upto = target.worker.last_msg_id
+        for i, tok in enumerate(published[: upto + 1]):
+            ref.process(Message(i, {"token": tok}, 0.0))
+        verified = ref.state_equal(target.worker, exact=not batched_replay)
+
+    return ExperimentResult(
+        report=report,
+        verified=verified,
+        published=len(published),
+        processed_by_target=target.worker.n_processed,
+        lam=message_rate,
+        mu=mu,
+        downtime=report.downtime,
+        migration_time=report.migration_time,
+    )

@@ -1,0 +1,6 @@
+# The paper (pure infrastructure) has no kernel-level contribution; the
+# kernels here serve the *framework's* compute hot-spots: attention
+# (prefill + flash-decode over migrating KV caches) and the recurrent
+# mixers whose states MS2M replays.  Each has a pure-jnp oracle in ref.py
+# and a dispatching wrapper in ops.py.
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel for single-token (decode) attention over a KV cache.
+
+Flash-decode structure: the KV cache's sequence axis is the innermost grid
+dim; partial (max, sum, acc) statistics accumulate in VMEM scratch and are
+finalized on the last block.  On a seq-sharded cache (logical axis ``kv_seq``
+-> mesh ``model``) each shard runs this kernel over its local slice and the
+partials combine with an LSE-weighted psum in the ops wrapper.
+
+q [B,1,H,D] is tiny; it is broadcast to every kv block, so the kernel is
+purely HBM-bandwidth-bound on the cache — its roofline is bytes(cache)/bw.
+
+Validated in interpret mode against ``ref.decode_attention``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import NEG_INF
+
+
+def _decode_kernel(
+    qpos_ref,  # SMEM [1] current position (per batch row)
+    q_ref,  # [1, H, D] (one batch row, all heads)
+    k_ref, v_ref,  # [1, bk, Hkv, D]
+    kpos_ref,  # [1, bk] slot positions (-1 = empty)
+    o_ref,  # [1, H, D]
+    acc_ref, m_ref, l_ref,  # VMEM scratch [H, D], [H, 128], [H, 128]
+    *, block_k: int, kv_steps: int, g: int, sm_scale: float,
+):
+    ik = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * sm_scale  # [H, D]
+    k = k_ref[0].astype(jnp.float32)  # [bk, Hkv, D]
+    v = v_ref[0].astype(jnp.float32)
+    H = q.shape[0]
+    Hkv = k.shape[1]
+    # GQA: repeat kv heads across the query-head group
+    kh = jnp.repeat(k.transpose(1, 0, 2), g, axis=0)  # [H, bk, D]
+    vh = jnp.repeat(v.transpose(1, 0, 2), g, axis=0)
+    s = jax.lax.dot_general(
+        q[:, None, :], kh, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )[:, 0, :]  # [H, bk]
+    kpos = kpos_ref[0]  # [bk]
+    valid = (kpos >= 0) & (kpos <= qpos_ref[pl.program_id(0)])
+    s = jnp.where(valid[None, :], s, NEG_INF)
+    m_prev = m_ref[:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[:, 0] = l_ref[:, 0] * corr + jnp.sum(p, axis=-1)
+    m_ref[:, 0] = m_new
+    pv = jax.lax.dot_general(
+        p[:, None, :], vh, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )[:, 0, :]  # [H, D]
+    acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+
+    @pl.when(ik == kv_steps - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[:, 0], 1e-37)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q, k_cache, v_cache, q_pos, k_pos, *, block_k: int = 512,
+                     interpret: bool = False):
+    """q [B,1,H,D]; caches [B,S,Hkv,D]; q_pos [B]; k_pos [B,S] -> [B,1,H,D]."""
+    B, _, H, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    g = H // Hkv
+    block_k = min(block_k, S)
+    assert S % block_k == 0
+    nk = S // block_k
+    sm_scale = float(1.0 / (D ** 0.5))
+    out = pl.pallas_call(
+        functools.partial(
+            _decode_kernel, block_k=block_k, kv_steps=nk, g=g, sm_scale=sm_scale
+        ),
+        grid=(B, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),
+            pl.BlockSpec((1, H, D), lambda b, ik: (b, 0, 0)),
+            pl.BlockSpec((1, block_k, Hkv, D), lambda b, ik: (b, ik, 0, 0)),
+            pl.BlockSpec((1, block_k, Hkv, D), lambda b, ik: (b, ik, 0, 0)),
+            pl.BlockSpec((1, block_k), lambda b, ik: (b, ik)),
+        ],
+        out_specs=pl.BlockSpec((1, H, D), lambda b, ik: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((H, D), jnp.float32),
+            pltpu.VMEM((H, 128), jnp.float32),
+            pltpu.VMEM((H, 128), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(q_pos.astype(jnp.int32), q[:, 0], k_cache, v_cache, k_pos.astype(jnp.int32))
+    return out[:, None]

@@ -1,0 +1,136 @@
+"""Backend-dispatching jit'd wrappers around the Pallas kernels.
+
+Models call these entry points only.  On TPU the Pallas kernels run; on CPU
+(this container, incl. the 512-virtual-device dry-run) the blockwise jnp
+formulations lower instead — chosen so the dry-run HLO's FLOP/byte profile
+mirrors the kernel's tiling rather than a naive O(S^2)-materializing graph.
+
+Set ``REPRO_FORCE_PALLAS_INTERPRET=1`` to route through the Pallas kernels in
+interpret mode (slow; used by the kernel-equivalence tests).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels import flash_attention as _fa
+from repro.kernels import decode_attention as _da
+from repro.kernels import rglru as _rg
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret_forced() -> bool:
+    return os.environ.get("REPRO_FORCE_PALLAS_INTERPRET", "0") == "1"
+
+
+def _fit_block(size: int, want: int) -> int:
+    b = max(min(want, size), 1)
+    while size % b:
+        b //= 2
+    return b
+
+
+def attention(q, k, v, *, causal=True, window=0, block_k=1024):
+    """Train/prefill attention.  q [B,S,H,D]; k/v [B,S,Hkv,D]."""
+    if _on_tpu():
+        return _fa.flash_attention(
+            q, k, v, causal=causal, window=window,
+            block_q=_fit_block(q.shape[1], 512),
+            block_k=_fit_block(k.shape[1], 512))
+    if _interpret_forced():
+        Sq, Sk = q.shape[1], k.shape[1]
+        bq = max(min(512, Sq), 1)
+        bk = max(min(512, Sk), 1)
+        while Sq % bq:
+            bq //= 2
+        while Sk % bk:
+            bk //= 2
+        return _fa.flash_attention(
+            q, k, v, causal=causal, window=window,
+            block_q=bq, block_k=bk, interpret=True,
+        )
+    if window and window > 0 and q.shape[1] == k.shape[1] and q.shape[1] % window == 0:
+        return ref.banded_local_attention(q, k, v, window=window)
+    return ref.blockwise_attention(q, k, v, causal=causal, window=window,
+                                   block_k=block_k)
+
+
+def decode_attention(q, k_cache, v_cache, q_pos, k_pos):
+    """Single-token attention over KV cache. q [B,1,H,D]."""
+    if _on_tpu():
+        return _da.decode_attention(q, k_cache, v_cache, q_pos, k_pos)
+    if _interpret_forced():
+        S = k_cache.shape[1]
+        bk = max(min(512, S), 1)
+        while S % bk:
+            bk //= 2
+        return _da.decode_attention(q, k_cache, v_cache, q_pos, k_pos,
+                                    block_k=bk, interpret=True)
+    return ref.decode_attention(q, k_cache, v_cache, q_pos=q_pos, k_pos=k_pos)
+
+
+def rglru_scan(x, a_param, gate_a, gate_x, h0=None, *, c: float = 8.0):
+    """RG-LRU over a sequence. Returns (h_seq, h_last)."""
+    if _on_tpu():
+        W, S = x.shape[2], x.shape[1]
+        bw = 512 if W % 512 == 0 else W
+        ch = 256
+        while S % ch:
+            ch //= 2
+        return _rg.rglru(x, a_param, gate_a, gate_x, h0, c=c, block_w=bw, chunk=ch)
+    if _interpret_forced():
+        W, S = x.shape[2], x.shape[1]
+        ch = min(64, S)
+        while S % ch:
+            ch //= 2
+        return _rg.rglru(x, a_param, gate_a, gate_x, h0, c=c, block_w=W,
+                         chunk=ch, interpret=True)
+    return ref.blockwise_rglru(x, a_param, gate_a, gate_x, h0, c=c)
+
+
+def slstm_scan(x_i, x_f, x_z, x_o, r_i, r_f, r_z, r_o, state=None):
+    """sLSTM over a sequence.  TPU (fresh state): per-head-parallel Pallas
+    kernel; portable / state-threaded path: the lax.scan recurrence."""
+    from repro.kernels import slstm as _sl
+
+    if state is None and (_on_tpu() or _interpret_forced()):
+        S = x_i.shape[1]
+        ch = _fit_block(S, 128)
+        h = _sl.slstm(x_i, x_f, x_z, x_o, r_i, r_f, r_z, r_o, chunk=ch,
+                      interpret=not _on_tpu())
+        return h, None
+    return ref.naive_slstm(x_i, x_f, x_z, x_o, r_i, r_f, r_z, r_o, state)
+
+
+def mlstm_scan(q, k, v, i_gate, f_gate, state=None):
+    """mLSTM over a sequence.  TPU: chunkwise-parallel Pallas kernel (MXU
+    matmuls); portable path: the stabilized lax.scan recurrence.
+
+    The Pallas path currently returns outputs only (fresh-state sequences,
+    as in training); callers threading serving state use the scan path.
+    """
+    from repro.kernels import mlstm as _ml
+
+    if state is None and _on_tpu():
+        S = q.shape[1]
+        ch = 128
+        while S % ch:
+            ch //= 2
+        h = _ml.mlstm(q, k, v, i_gate, f_gate, chunk=ch)
+        # final state for cache continuation comes from the scan path only
+        # when requested; training uses h alone.
+        return h, None
+    if state is None and _interpret_forced():
+        S = q.shape[1]
+        ch = min(64, S)
+        while S % ch:
+            ch //= 2
+        h = _ml.mlstm(q, k, v, i_gate, f_gate, chunk=ch, interpret=True)
+        return h, None
+    return ref.naive_mlstm(q, k, v, i_gate, f_gate, state)

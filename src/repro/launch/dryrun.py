@@ -1,0 +1,367 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede every other import: jax locks the device count on first use.
+
+DOC = """Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell and extract the roofline terms.
+
+For each cell:
+  * build the production mesh (16x16 single-pod / 2x16x16 multi-pod);
+  * derive shardings for params/optimizer/cache/batch from logical axes;
+  * ``jax.jit(step).lower(**ShapeDtypeStructs).compile()`` — zero device
+    allocation (AOT on placeholder host devices);
+  * record memory_analysis(), cost_analysis(), and collective bytes parsed
+    from the compiled HLO (all-gather/all-reduce/reduce-scatter/all-to-all/
+    collective-permute), then the three roofline terms:
+        compute    = FLOPs_per_chip / 197e12
+        memory     = bytes_per_chip / 819e9
+        collective = coll_bytes_per_chip / 50e9
+
+Usage:
+  python -m repro.launch.dryrun --arch all --shape all --mesh both \
+      --out results/dryrun.json
+"""
+__doc__ = DOC
+
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import SHAPES, ModelConfig, ShapeSpec
+from repro.optim import adamw
+from repro.train import step as steplib
+
+# --------------------------------------------------------------------------
+# hardware constants (TPU v5e)
+# --------------------------------------------------------------------------
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+LINK_BW = 50e9           # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Sum result-operand bytes of every collective op in the HLO."""
+    per_kind: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        for kind in _COLLECTIVES:
+            # match "= <type> all-reduce(" and fused variants like
+            # "all-reduce-start("; skip "-done" (same buffer, avoid double count)
+            marker = f" {kind}("
+            marker_start = f" {kind}-start("
+            if marker in stripped or marker_start in stripped:
+                idx = stripped.find(marker)
+                if idx < 0:
+                    idx = stripped.find(marker_start)
+                lhs = stripped[:idx]
+                if "=" in lhs:
+                    lhs = lhs.split("=", 1)[1]
+                total = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(lhs))
+                per_kind[kind] += total
+                counts[kind] += 1
+                break
+    return {
+        "bytes_by_kind": per_kind,
+        "counts": counts,
+        "total_bytes": sum(per_kind.values()),
+    }
+
+
+# --------------------------------------------------------------------------
+# per-cell dry run
+# --------------------------------------------------------------------------
+
+def _mem_dict(compiled) -> Dict[str, Any]:
+    try:
+        m = compiled.memory_analysis()
+        return {
+            "argument_bytes": int(getattr(m, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(m, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(m, "temp_size_in_bytes", 0)),
+            "generated_code_bytes": int(getattr(m, "generated_code_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(m, "alias_size_in_bytes", 0)),
+        }
+    except Exception as e:  # noqa: BLE001
+        return {"error": str(e)}
+
+
+def _cost_dict(compiled) -> Dict[str, float]:
+    try:
+        c = compiled.cost_analysis()
+        if isinstance(c, (list, tuple)):
+            c = c[0]
+        return {
+            "flops": float(c.get("flops", 0.0)),
+            "bytes_accessed": float(c.get("bytes accessed", 0.0)),
+            "transcendentals": float(c.get("transcendentals", 0.0)),
+        }
+    except Exception as e:  # noqa: BLE001
+        return {"error": str(e)}
+
+
+def opt_config_for(cfg: ModelConfig) -> adamw.AdamWConfig:
+    # 400B-class: factored second moment + bf16 first moment so the
+    # optimizer state fits 16 GB/chip at 256-way sharding (DESIGN.md §3).
+    if cfg.param_count() > 100e9:
+        return adamw.AdamWConfig(factored=True, moment_dtype="bfloat16")
+    return adamw.AdamWConfig()
+
+
+def _compile_cell(cfg, shape, mesh, rules, tcfg=None, unroll=False):
+    """Lower + compile one step for (cfg, shape) on mesh; returns compiled."""
+    if shape.kind == "train":
+        tcfg = tcfg or steplib.TrainStepConfig(opt=opt_config_for(cfg),
+                                               unroll=unroll)
+        if unroll and not tcfg.unroll:
+            tcfg = dataclasses.replace(tcfg, unroll=True)
+        p_shapes, p_shard, o_shapes, o_shard = steplib.train_state_shardings(
+            cfg, mesh, tcfg.opt, rules, param_dtype=tcfg.param_dtype)
+        b_shard = steplib.batch_shardings(cfg, shape, mesh, rules)
+        specs = steplib.input_specs(cfg, shape)
+        step_fn = steplib.build_train_step(cfg, tcfg)
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(p_shard, o_shard, b_shard, None),
+            out_shardings=(p_shard, o_shard, None),
+            donate_argnums=(0, 1),
+        )
+        with mesh:
+            lowered = jitted.lower(
+                p_shapes, o_shapes, specs, jax.ShapeDtypeStruct((), jnp.int32))
+            return lowered.compile()
+    elif shape.kind == "prefill":
+        p_shapes, p_axes = steplib.param_shapes_and_axes(cfg)
+        p_shard = steplib._shardings_from(mesh, p_axes, p_shapes, rules)
+        c_shapes, c_shard = steplib.cache_shardings(cfg, shape, mesh, rules)
+        b_shard = steplib.batch_shardings(cfg, shape, mesh, rules)
+        step_fn = steplib.build_prefill_step(cfg, unroll=unroll)
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(p_shard, c_shard, b_shard),
+            out_shardings=(None, c_shard),
+            donate_argnums=(1,),
+        )
+        specs = steplib.input_specs(cfg, shape)
+        with mesh:
+            lowered = jitted.lower(p_shapes, c_shapes, specs)
+            return lowered.compile()
+    else:  # decode
+        p_shapes, p_axes = steplib.param_shapes_and_axes(cfg)
+        p_shard = steplib._shardings_from(mesh, p_axes, p_shapes, rules)
+        c_shapes, c_shard = steplib.cache_shardings(cfg, shape, mesh, rules)
+        b_shard = steplib.batch_shardings(cfg, shape, mesh, rules)
+        step_fn = steplib.build_decode_step(cfg, unroll=unroll)
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(p_shard, c_shard, b_shard["tokens"],
+                          b_shard["positions"]),
+            out_shardings=(None, c_shard),
+            donate_argnums=(1,),
+        )
+        specs = steplib.input_specs(cfg, shape)
+        with mesh:
+            lowered = jitted.lower(p_shapes, c_shapes, specs["tokens"],
+                                   specs["positions"])
+            return lowered.compile()
+
+
+def _reduced_cfg(cfg: ModelConfig, k: int) -> ModelConfig:
+    """Same config with k layer groups (for cost calibration)."""
+    kw = {"num_layers": cfg.group_size * k}
+    if cfg.is_encoder_decoder:
+        kw["num_encoder_layers"] = max(
+            1, cfg.num_encoder_layers // cfg.num_groups * k)
+    return dataclasses.replace(cfg, **kw)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             tcfg: Optional[steplib.TrainStepConfig] = None,
+             calibrate: bool = True) -> Dict[str, Any]:
+    cfg = configs.get_config(arch)
+    shape = SHAPES[shape_name]
+    t_start = time.time()
+    row: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind,
+    }
+    if not cfg.runnable(shape):
+        row["status"] = "SKIP"
+        row["reason"] = ("long_500k needs sub-quadratic attention; "
+                         f"{cfg.name} is full-attention (DESIGN.md §4)")
+        return row
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    rules = steplib.arch_rules(cfg)
+    rules.dropped.clear()
+
+    # 1) full-depth scanned compile: proves the cell compiles at scale and
+    #    yields the honest memory analysis.
+    compiled = _compile_cell(cfg, shape, mesh, rules, tcfg=tcfg)
+    cost = _cost_dict(compiled)
+    mem = _mem_dict(compiled)
+    coll = parse_collective_bytes(compiled.as_text())
+
+    # 2) cost calibration: XLA counts a scan body once, so derive per-group
+    #    costs from two small *unrolled* variants (k=1, k=2 groups):
+    #    total(G) = c1 + (G-1) * (c2 - c1).
+    G = cfg.num_groups
+    calib = None
+    if calibrate and G > 1:
+        c1 = _compile_cell(_reduced_cfg(cfg, 1), shape, mesh, rules,
+                           tcfg=tcfg, unroll=True)
+        c2 = _compile_cell(_reduced_cfg(cfg, 2), shape, mesh, rules,
+                           tcfg=tcfg, unroll=True)
+        cost1, cost2 = _cost_dict(c1), _cost_dict(c2)
+        coll1 = parse_collective_bytes(c1.as_text())
+        coll2 = parse_collective_bytes(c2.as_text())
+
+        def corr(a, b):
+            return a + (G - 1) * (b - a)
+
+        calib = {
+            "flops": corr(cost1.get("flops", 0.0), cost2.get("flops", 0.0)),
+            "bytes_accessed": corr(cost1.get("bytes_accessed", 0.0),
+                                   cost2.get("bytes_accessed", 0.0)),
+            "coll_bytes": corr(coll1["total_bytes"], coll2["total_bytes"]),
+            "coll_by_kind": {
+                k: corr(coll1["bytes_by_kind"][k], coll2["bytes_by_kind"][k])
+                for k in coll1["bytes_by_kind"]},
+            "k1": {"cost": cost1, "coll": coll1["total_bytes"]},
+            "k2": {"cost": cost2, "coll": coll2["total_bytes"]},
+        }
+        flops_pd = calib["flops"]
+        bytes_pd = calib["bytes_accessed"]
+        coll_pd = calib["coll_bytes"]
+    else:
+        flops_pd = cost.get("flops", 0.0)
+        bytes_pd = cost.get("bytes_accessed", 0.0)
+        coll_pd = coll["total_bytes"]
+
+    tokens = shape.batch * (shape.seq if shape.kind != "decode" else 1)
+    # MODEL_FLOPS: 6ND for a train step (fwd+bwd), 2ND forward-only
+    model_flops = cfg.model_flops(tokens) * (1.0 if shape.kind == "train" else 1.0 / 3.0)
+
+    compute_t = flops_pd / PEAK_FLOPS
+    memory_t = bytes_pd / HBM_BW
+    coll_t = coll_pd / LINK_BW
+    dominant = max(
+        (("compute", compute_t), ("memory", memory_t), ("collective", coll_t)),
+        key=lambda kv: kv[1])[0]
+
+    row.update({
+        "status": "OK",
+        "chips": chips,
+        "cost_analysis": cost,
+        "memory_analysis": mem,
+        "collectives": coll,
+        "roofline": {
+            "compute_s": compute_t,
+            "memory_s": memory_t,
+            "collective_s": coll_t,
+            "dominant": dominant,
+            "flops_per_chip": flops_pd,
+            "bytes_per_chip": bytes_pd,
+            "coll_bytes_per_chip": coll_pd,
+            "model_flops_global": model_flops,
+            "hlo_flops_global": flops_pd * chips,
+            "useful_flops_ratio": (model_flops / (flops_pd * chips)
+                                   if flops_pd else 0.0),
+        },
+        "dropped_shardings": [list(map(str, d)) for d in rules.dropped[:20]],
+        "compile_seconds": round(time.time() - t_start, 1),
+    })
+    return row
+
+
+# --------------------------------------------------------------------------
+# driver
+# --------------------------------------------------------------------------
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--append", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = configs.list_archs() if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    import os as _os
+    _os.makedirs(_os.path.dirname(args.out) or ".", exist_ok=True)
+    rows = []
+    mode = "a" if args.append else "w"
+    failures = 0
+    with open(args.out, mode) as f:
+        for arch in archs:
+            for shape in shapes:
+                for multi in meshes:
+                    label = f"{arch} x {shape} x {'2x16x16' if multi else '16x16'}"
+                    print(f"[dryrun] {label} ...", flush=True)
+                    try:
+                        row = run_cell(arch, shape, multi)
+                    except Exception as e:  # noqa: BLE001
+                        row = {"arch": arch, "shape": shape,
+                               "mesh": "2x16x16" if multi else "16x16",
+                               "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+                               "traceback": traceback.format_exc()[-2000:]}
+                        failures += 1
+                    rows.append(row)
+                    f.write(json.dumps(row) + "\n")
+                    f.flush()
+                    status = row["status"]
+                    extra = ""
+                    if status == "OK":
+                        r = row["roofline"]
+                        extra = (f" dominant={r['dominant']}"
+                                 f" compute={r['compute_s']*1e3:.1f}ms"
+                                 f" mem={r['memory_s']*1e3:.1f}ms"
+                                 f" coll={r['collective_s']*1e3:.1f}ms"
+                                 f" useful={r['useful_flops_ratio']:.2f}"
+                                 f" ({row['compile_seconds']}s)")
+                    print(f"[dryrun] {label}: {status}{extra}", flush=True)
+    ok = sum(1 for r in rows if r["status"] == "OK")
+    skip = sum(1 for r in rows if r["status"] == "SKIP")
+    print(f"[dryrun] done: {ok} OK, {skip} SKIP, {failures} FAIL")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

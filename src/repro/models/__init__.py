@@ -1,0 +1,10 @@
+from repro.models.config import ModelConfig, BlockKind, SHAPES, ShapeSpec  # noqa: F401
+from repro.models import common, attention, mlp, moe, rglru, xlstm  # noqa: F401
+from repro.models.transformer import (  # noqa: F401
+    init_lm,
+    lm_loss,
+    lm_forward,
+    lm_prefill,
+    lm_decode_step,
+    init_cache,
+)

@@ -1,0 +1,38 @@
+"""Dense FFN: SwiGLU (default) or plain activation MLP (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import param, value_of
+from repro.sharding.rules import with_sharding_constraint_logical as constrain
+
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+def init_mlp(key, cfg, d_ff: int = 0):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": param(ks[0], (d, ff), ("embed", "mlp")),
+        "w_down": param(ks[1], (ff, d), ("mlp", "embed")),
+    }
+    if cfg.mlp_gated:
+        p["w_gate"] = param(ks[2], (d, ff), ("embed", "mlp"))
+    return p
+
+
+def mlp_forward(params, x, cfg):
+    dt = x.dtype
+    up = x @ value_of(params["w_up"]).astype(dt)
+    up = constrain(up, ("batch", "seq", "act_mlp"))
+    if cfg.mlp_gated:
+        gate = _act(cfg.mlp_act)(x @ value_of(params["w_gate"]).astype(dt))
+        gate = constrain(gate, ("batch", "seq", "act_mlp"))
+        h = up * gate
+    else:
+        h = _act(cfg.mlp_act)(up)
+    out = h @ value_of(params["w_down"]).astype(dt)
+    return constrain(out, ("batch", "seq", "act_embed"))

@@ -1,0 +1,111 @@
+"""Griffin/recurrentgemma recurrent block: gated branch + temporal conv1d +
+RG-LRU (arXiv:2402.19427 fig. 2).  State is O(1) in sequence length — the
+architecture family for which MS2M migration is checkpoint-dominant (tiny
+replay log contribution per message).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.common import param, value_of, zeros_param
+from repro.sharding.rules import with_sharding_constraint_logical as constrain
+
+
+def init_rglru_block(key, cfg):
+    d = cfg.d_model
+    w = cfg.rglru_width or d
+    H = cfg.num_heads
+    hb = w // H  # block-diagonal gate head width
+    ks = jax.random.split(key, 8)
+    return {
+        "w_x": param(ks[0], (d, w), ("embed", "rec_width")),
+        "w_gate_branch": param(ks[1], (d, w), ("embed", "rec_width")),
+        "conv_w": param(ks[2], (cfg.conv1d_width, w), ("conv", "rec_width"), scale=0.1),
+        "conv_b": zeros_param((w,), ("rec_width",)),
+        # block-diagonal input/recurrence gates (per-head [hb, hb])
+        "gate_a_w": param(ks[3], (H, hb, hb), ("act_kv_heads", None, "rec_width")),
+        "gate_x_w": param(ks[4], (H, hb, hb), ("act_kv_heads", None, "rec_width")),
+        "gate_a_b": zeros_param((w,), ("rec_width",)),
+        "gate_x_b": zeros_param((w,), ("rec_width",)),
+        # a-parameter initialized so a = sigmoid(Λ) spans ~[0.9, 0.999]
+        "a_param": param(ks[5], (w,), ("rec_width",), scale=0.5),
+        "w_out": param(ks[6], (w, d), ("rec_width", "embed")),
+    }
+
+
+def _conv1d(x, w, b, state=None):
+    """Causal depthwise conv over time.  x [B,S,W]; w [K,W]; state [B,K-1,W]."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # [B, S+K-1, W]
+    out = sum(xp[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(K))
+    new_state = xp[:, -(K - 1) :] if K > 1 else None
+    return out + b[None, None, :], new_state
+
+
+def _block_gates(params, x, cfg):
+    """Block-diagonal gate projections. x [B,S,W] -> (gate_a, gate_x)."""
+    H = cfg.num_heads
+    B, S, W = x.shape
+    hb = W // H
+    xh = x.reshape(B, S, H, hb)
+    ga = jnp.einsum("bshi,hij->bshj", xh, value_of(params["gate_a_w"]).astype(x.dtype))
+    gx = jnp.einsum("bshi,hij->bshj", xh, value_of(params["gate_x_w"]).astype(x.dtype))
+    ga = ga.reshape(B, S, W) + value_of(params["gate_a_b"]).astype(x.dtype)
+    gx = gx.reshape(B, S, W) + value_of(params["gate_x_b"]).astype(x.dtype)
+    return ga, gx
+
+
+def rglru_block_forward(params, x, cfg, state=None):
+    """x [B,S,D] -> (out [B,S,D], new_state {h, conv}).
+
+    state: {"h": [B,W] f32, "conv": [B,K-1,W]} or None (zeros).
+    """
+    dt = x.dtype
+    gate_branch = jax.nn.gelu(x @ value_of(params["w_gate_branch"]).astype(dt))
+    u = x @ value_of(params["w_x"]).astype(dt)
+    u = constrain(u, ("batch", "seq", "rec_width"))
+    conv_state = None if state is None else state["conv"]
+    u, new_conv = _conv1d(u, value_of(params["conv_w"]).astype(dt),
+                          value_of(params["conv_b"]).astype(dt), conv_state)
+    ga, gx = _block_gates(params, u, cfg)
+    h0 = None if state is None else state["h"]
+    hs, h_last = ops.rglru_scan(u, value_of(params["a_param"]), ga, gx, h0)
+    hs = constrain(hs, ("batch", "seq", "rec_width"))
+    out = (hs * gate_branch) @ value_of(params["w_out"]).astype(dt)
+    new_state = {"h": h_last, "conv": new_conv}
+    return constrain(out, ("batch", "seq", "act_embed")), new_state
+
+
+def rglru_decode_step(params, x, cfg, state):
+    """x [B,1,D] -> (out [B,1,D], new_state)."""
+    from repro.kernels import ref as _ref
+
+    dt = x.dtype
+    gate_branch = jax.nn.gelu(x @ value_of(params["w_gate_branch"]).astype(dt))
+    u = x @ value_of(params["w_x"]).astype(dt)
+    u, new_conv = _conv1d(u, value_of(params["conv_w"]).astype(dt),
+                          value_of(params["conv_b"]).astype(dt), state["conv"])
+    ga, gx = _block_gates(params, u, cfg)
+    h = _ref.rglru_decode_step(
+        state["h"], u[:, 0], value_of(params["a_param"]), ga[:, 0], gx[:, 0]
+    )
+    out = (h[:, None, :].astype(dt) * gate_branch) @ value_of(params["w_out"]).astype(dt)
+    return out, {"h": h, "conv": new_conv}
+
+
+def init_rglru_state(cfg, batch: int):
+    w = cfg.rglru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, w), jnp.float32),
+    }
+
+
+def rglru_state_logical_axes():
+    return {"h": ("batch", "rec_width"), "conv": ("batch", None, "rec_width")}

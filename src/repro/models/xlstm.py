@@ -1,0 +1,157 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix-memory, parallelizable)
+and sLSTM (scalar-memory, strictly sequential) — both with O(1) decode state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.models.common import param, value_of, zeros_param, rms_norm
+from repro.sharding.rules import with_sharding_constraint_logical as constrain
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (pre-up-projection, factor 2)
+# ---------------------------------------------------------------------------
+
+def _inner(cfg):
+    return 2 * cfg.d_model
+
+
+def init_mlstm_block(key, cfg):
+    d = cfg.d_model
+    m = _inner(cfg)
+    H = cfg.num_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": param(ks[0], (d, m), ("embed", "rec_width")),
+        "w_gate": param(ks[1], (d, m), ("embed", "rec_width")),
+        "wq": param(ks[2], (m, m), ("rec_width", "qout")),
+        "wk": param(ks[3], (m, m), ("rec_width", "qout")),
+        "wv": param(ks[4], (m, m), ("rec_width", "qout")),
+        "w_if": param(ks[5], (m, 2 * H), ("rec_width", None), scale=0.02),
+        "b_if": zeros_param((2 * H,), (None,)),
+        "out_norm": zeros_param((m // H,), ("stats",)),
+        "w_down": param(ks[6], (m, d), ("rec_width", "embed")),
+    }
+
+
+def _mlstm_qkv(params, u, cfg):
+    B, S, m = u.shape
+    H = cfg.num_heads
+    hd = m // H
+    dt = u.dtype
+    q = (u @ value_of(params["wq"]).astype(dt)).reshape(B, S, H, hd)
+    k = (u @ value_of(params["wk"]).astype(dt)).reshape(B, S, H, hd)
+    v = (u @ value_of(params["wv"]).astype(dt)).reshape(B, S, H, hd)
+    if_g = u @ value_of(params["w_if"]).astype(dt) + value_of(params["b_if"]).astype(dt)
+    i_gate, f_gate = jnp.split(if_g.astype(jnp.float32), 2, axis=-1)  # [B,S,H]
+    f_gate = f_gate + 3.0  # forget-gate bias init: remember by default
+    return q, k, v, i_gate, f_gate
+
+
+def mlstm_block_forward(params, x, cfg, state=None):
+    """x [B,S,D] -> (out, new_state (C,n,m))."""
+    dt = x.dtype
+    H = cfg.num_heads
+    gate = jax.nn.silu(x @ value_of(params["w_gate"]).astype(dt))
+    u = x @ value_of(params["w_up"]).astype(dt)
+    u = constrain(u, ("batch", "seq", "rec_width"))
+    q, k, v, ig, fg = _mlstm_qkv(params, u, cfg)
+    hs, new_state = ops.mlstm_scan(q, k, v, ig, fg, state)
+    hs = rms_norm(hs, params["out_norm"], cfg.norm_eps)  # per-head norm
+    hs = hs.reshape(x.shape[0], x.shape[1], -1).astype(dt)
+    out = (hs * gate) @ value_of(params["w_down"]).astype(dt)
+    return constrain(out, ("batch", "seq", "act_embed")), new_state
+
+
+def mlstm_decode_step(params, x, cfg, state):
+    dt = x.dtype
+    gate = jax.nn.silu(x @ value_of(params["w_gate"]).astype(dt))
+    u = x @ value_of(params["w_up"]).astype(dt)
+    q, k, v, ig, fg = _mlstm_qkv(params, u, cfg)
+    new_state, h = ref.mlstm_decode_step(
+        state, q[:, 0], k[:, 0], v[:, 0], ig[:, 0], fg[:, 0]
+    )
+    h = rms_norm(h[:, None], params["out_norm"], cfg.norm_eps)
+    h = h.reshape(x.shape[0], 1, -1).astype(dt)
+    out = (h * gate) @ value_of(params["w_down"]).astype(dt)
+    return out, new_state
+
+
+def init_mlstm_state(cfg, batch: int):
+    m = _inner(cfg)
+    H = cfg.num_heads
+    hd = m // H
+    return (
+        jnp.zeros((batch, H, hd, hd), jnp.float32),
+        jnp.zeros((batch, H, hd), jnp.float32),
+        jnp.full((batch, H), ref.NEG_INF, jnp.float32),
+    )
+
+
+def mlstm_state_logical_axes():
+    return (
+        ("batch", "act_kv_heads", "rec_width", None),
+        ("batch", "act_kv_heads", "rec_width"),
+        ("batch", "act_kv_heads"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+# ---------------------------------------------------------------------------
+
+def init_slstm_block(key, cfg):
+    d = cfg.d_model
+    H = cfg.num_heads
+    hb = d // H
+    ks = jax.random.split(key, 10)
+    p = {"w_out": param(ks[8], (d, d), ("rec_width", "embed"))}
+    for i, g in enumerate(("i", "f", "z", "o")):
+        p[f"w_{g}"] = param(ks[i], (d, d), ("embed", "rec_width"))
+        # block-diagonal per-head recurrence (xLSTM §2.2)
+        p[f"r_{g}"] = param(ks[4 + i], (H, hb, hb),
+                            ("act_kv_heads", None, "rec_width"), scale=0.02)
+        p[f"b_{g}"] = zeros_param((d,), ("rec_width",))
+    return p
+
+
+def _slstm_inputs(params, x):
+    dt = x.dtype
+    pre = {}
+    for g in ("i", "f", "z", "o"):
+        pre[g] = x @ value_of(params[f"w_{g}"]).astype(dt) + value_of(params[f"b_{g}"]).astype(dt)
+    return pre
+
+
+def slstm_block_forward(params, x, cfg, state=None):
+    pre = _slstm_inputs(params, x)
+    hs, new_state = ops.slstm_scan(
+        pre["i"], pre["f"], pre["z"], pre["o"],
+        value_of(params["r_i"]), value_of(params["r_f"]),
+        value_of(params["r_z"]), value_of(params["r_o"]), state,
+    )
+    out = hs.astype(x.dtype) @ value_of(params["w_out"]).astype(x.dtype)
+    return constrain(out, ("batch", "seq", "act_embed")), new_state
+
+
+def slstm_decode_step(params, x, cfg, state):
+    out, new_state = slstm_block_forward(params, x, cfg, state)
+    return out, new_state
+
+
+def init_slstm_state(cfg, batch: int):
+    d = cfg.d_model
+    return (
+        jnp.zeros((batch, d), jnp.float32),
+        jnp.ones((batch, d), jnp.float32),
+        jnp.zeros((batch, d), jnp.float32),
+        jnp.zeros((batch, d), jnp.float32),
+    )
+
+
+def slstm_state_logical_axes():
+    ax = ("batch", "rec_width")
+    return (ax, ax, ax, ax)

@@ -1,0 +1,13 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    global_norm,
+    clip_by_global_norm,
+)
+from repro.optim.schedule import cosine_schedule, linear_warmup  # noqa: F401
+from repro.optim.compression import (  # noqa: F401
+    compress_gradients,
+    decompress_gradients,
+    ef_init,
+)

@@ -1,0 +1,126 @@
+"""AdamW built in-repo (no optax): sharded moments, decoupled weight decay,
+global-norm clipping, optional factored second moment (Adafactor-style) for
+the 400B-class archs where full fp32 moments would not fit 16 GB/chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"
+    factored: bool = False  # factored 2nd moment for giant models
+    min_factored_dim: int = 128
+
+
+def _factorable(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] >= 128 and shape[-2] >= 128
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def init_leaf(p):
+        m = jnp.zeros(p.shape, mdt)
+        if cfg.factored and _factorable(p.shape):
+            v = {
+                "row": jnp.zeros(p.shape[:-1], mdt),
+                "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], mdt),
+            }
+        else:
+            v = jnp.zeros(p.shape, mdt)
+        return {"m": m, "v": v}
+
+    return {
+        "count": jnp.zeros((), jnp.int32),
+        "mu": jax.tree.map(init_leaf, params),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def _vhat(mu_v, g2, b2, shape):
+    """Update + reconstruct the (possibly factored) second moment."""
+    if isinstance(mu_v, dict):  # factored
+        row = b2 * mu_v["row"] + (1 - b2) * jnp.mean(g2, axis=-1)
+        col = b2 * mu_v["col"] + (1 - b2) * jnp.mean(g2, axis=-2)
+        mean_row = jnp.mean(row, axis=-1, keepdims=True)
+        v_full = (row[..., None] * col[..., None, :]
+                  / jnp.maximum(mean_row[..., None], 1e-30))
+        return {"row": row, "col": col}, v_full
+    v = b2 * mu_v + (1 - b2) * g2
+    return v, v
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig, lr=None):
+    """Returns (new_params, new_state, metrics).  params fp32 leaves."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    count = state["count"] + 1
+    lr = cfg.lr if lr is None else lr
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, mu):
+        g = g.astype(jnp.float32)
+        m = cfg.b1 * mu["m"].astype(jnp.float32) + (1 - cfg.b1) * g
+        new_v, v_full = _vhat(
+            jax.tree.map(lambda x: x.astype(jnp.float32), mu["v"]),
+            jnp.square(g), cfg.b2, p.shape)
+        mhat = m / b1c
+        vhat = v_full / b2c
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        new_p = p.astype(jnp.float32) - lr * (step + cfg.weight_decay * p.astype(jnp.float32))
+        mdt = jnp.dtype(cfg.moment_dtype)
+        return new_p.astype(p.dtype), {
+            "m": m.astype(mdt),
+            "v": jax.tree.map(lambda x: x.astype(mdt), new_v),
+        }
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    out = [upd(p, g, mu) for p, g, mu in zip(flat_p, flat_g, flat_mu)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    return new_params, {"count": count, "mu": new_mu}, {"grad_norm": gnorm}
+
+
+def opt_state_logical_axes(param_axes, cfg: AdamWConfig):
+    """Optimizer-state logical axes mirror the parameter axes (FSDP: moments
+    shard exactly like their parameter)."""
+    def leaf_axes(ax):
+        if cfg.factored:
+            # we can't know factorability without shapes; callers using
+            # factored mode derive axes from eval_shape instead.
+            raise NotImplementedError
+        return {"m": ax, "v": ax}
+
+    return {
+        "count": (),
+        "mu": jax.tree.map(
+            leaf_axes, param_axes,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x),
+        ),
+    }

@@ -1,0 +1,61 @@
+"""Error-feedback int8 gradient compression for the cross-pod all-reduce.
+
+At 512+ chips the pod-to-pod (DCN-ish) all-reduce of bf16 gradients is the
+first collective to saturate; int8 block-quantization with error feedback
+(residual carried to the next step) cuts those bytes 2x with negligible
+quality loss — a standard distributed-optimization trick (1-bit Adam / EF21
+family), applied here only across the ``pod`` axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def ef_init(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def _quant(x):
+    """Blockwise symmetric int8 quantization along the last dim."""
+    orig_shape = x.shape
+    flat = x.reshape(-1)
+    pad = (-flat.size) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32), orig_shape, pad
+
+
+def _dequant(q, scale, orig_shape, pad):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(orig_shape)
+
+
+def compress_gradients(grads, ef_state):
+    """-> (quantized tree, new ef_state).  g_q = Q(g + e); e' = g + e - g_q."""
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        q, scale, shape, pad = _quant(x)
+        deq = _dequant(q, scale, shape, pad)
+        return {"q": q, "scale": scale, "pad": pad}, x - deq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(ef_state)
+    pairs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return tdef.unflatten([p[0] for p in pairs]), tdef.unflatten([p[1] for p in pairs])
+
+
+def decompress_gradients(comp, like):
+    def one(c, g):
+        return _dequant(c["q"], c["scale"], g.shape, c["pad"]).astype(g.dtype)
+
+    flat_g, tdef = jax.tree.flatten(like)
+    flat_c = tdef.flatten_up_to(comp)
+    return tdef.unflatten([one(c, g) for c, g in zip(flat_c, flat_g)])

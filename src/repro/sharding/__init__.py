@@ -1,0 +1,15 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Model code annotates arrays with *logical* axis names; a rules table maps
+logical names -> mesh axis (or None = replicated). This keeps model code
+mesh-agnostic: the same model lowers on a single CPU device, a 16x16 pod,
+or a 2x16x16 multi-pod mesh by swapping the rules.
+"""
+from repro.sharding.rules import (  # noqa: F401
+    AxisRules,
+    DEFAULT_RULES,
+    logical_to_spec,
+    shard_logical,
+    tree_shardings,
+    with_sharding_constraint_logical,
+)

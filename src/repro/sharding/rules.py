@@ -1,0 +1,175 @@
+"""Logical-axis -> mesh-axis rules with best-effort divisibility fallback.
+
+A rule maps a logical axis name to a mesh axis name (or a tuple of mesh axes,
+or None).  ``logical_to_spec`` resolves a tensor's logical axes into a
+``PartitionSpec`` and *drops* any assignment whose mesh-axis size does not
+divide the dimension size (the "best-effort resolver").  This lets one rules
+table serve all ten architectures: e.g. ``heads -> model`` applies to
+codeqwen (32 heads / 16) but is silently dropped for gemma3 (8 heads), whose
+config instead selects the ``seq`` attention-sharding strategy.
+
+Dropped assignments are *recorded* (``AxisRules.dropped``) so the dry-run can
+report where the baseline sharding is lossy — those become hillclimb targets.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass
+class AxisRules:
+    """An ordered logical-axis -> mesh-axes mapping."""
+
+    rules: Mapping[str, MeshAxes]
+
+    def __post_init__(self):
+        self.dropped = []  # (logical_name, dim_size, mesh_axes) triples
+
+    def get(self, name: Optional[str]) -> MeshAxes:
+        if name is None:
+            return None
+        return self.rules.get(name, None)
+
+    def overriding(self, **overrides: MeshAxes) -> "AxisRules":
+        merged = dict(self.rules)
+        merged.update(overrides)
+        return AxisRules(merged)
+
+
+# The production mesh axes are ("pod", "data", "model") (multi-pod) or
+# ("data", "model") (single pod).  "pod" composes with "data" for batch /
+# FSDP sharding; specs below name both and the resolver drops axes that are
+# absent from the mesh, so the same rules serve both meshes.
+DEFAULT_RULES = AxisRules(
+    {
+        # --- activations ---
+        "batch": ("pod", "data"),
+        "seq": None,  # overridden to ("model",) by the `seq` attention strategy
+        "act_embed": None,
+        "act_heads": "model",
+        "act_kv_heads": None,
+        "act_qout": "model",
+        "act_mlp": "model",
+        "act_vocab": "model",
+        "kv_seq": "model",  # decode-time KV cache: flash-decode seq sharding
+        "act_experts": "model",
+        # --- params (FSDP over data; TP over model) ---
+        "embed": ("pod", "data"),
+        "mlp": "model",
+        "qout": "model",  # fused q/k/v/o head*head_dim projections
+        "kv_out": "model",
+        "heads": "model",
+        "vocab": "model",
+        "experts": "model",
+        "expert_mlp": None,
+        "rec_width": "model",  # RG-LRU / xLSTM channel dims
+        "layers": None,  # scanned-layer stacking axis: never sharded
+        "conv": None,
+        "stats": None,
+    }
+)
+
+
+def _mesh_axis_size(mesh: Mesh, axes: MeshAxes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= dict(zip(mesh.axis_names, mesh.devices.shape)).get(a, 1)
+    return size
+
+
+def _present(mesh: Mesh, axes: MeshAxes) -> MeshAxes:
+    """Filter out mesh axes that are not part of this mesh (e.g. 'pod')."""
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        axes = (axes,)
+    kept = tuple(a for a in axes if a in mesh.axis_names)
+    if not kept:
+        return None
+    return kept if len(kept) > 1 else kept[0]
+
+
+def logical_to_spec(
+    logical_axes: Sequence[Optional[str]],
+    mesh: Mesh,
+    rules: AxisRules = DEFAULT_RULES,
+    dims: Optional[Sequence[int]] = None,
+) -> P:
+    """Resolve logical axis names to a PartitionSpec, best-effort.
+
+    ``dims`` (optional) enables the divisibility check; without it, rules are
+    applied verbatim.  A mesh axis may be consumed by at most one dimension;
+    later dims lose conflicts (first-come-first-served, like t5x).
+    """
+    used: set = set()
+    spec = []
+    for i, name in enumerate(logical_axes):
+        axes = _present(mesh, rules.get(name))
+        if axes is None:
+            spec.append(None)
+            continue
+        ax_tuple = (axes,) if isinstance(axes, str) else tuple(axes)
+        ax_tuple = tuple(a for a in ax_tuple if a not in used)
+        if not ax_tuple:
+            spec.append(None)
+            continue
+        if dims is not None:
+            size = 1
+            for a in ax_tuple:
+                size *= _mesh_axis_size(mesh, a)
+            if size == 0 or dims[i] % size != 0:
+                rules.dropped.append((name, dims[i], ax_tuple))
+                spec.append(None)
+                continue
+        used.update(ax_tuple)
+        spec.append(ax_tuple if len(ax_tuple) > 1 else ax_tuple[0])
+    return P(*spec)
+
+
+def shard_logical(mesh: Mesh, logical_axes, rules=DEFAULT_RULES, dims=None) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(logical_axes, mesh, rules, dims))
+
+
+def with_sharding_constraint_logical(x, logical_axes, rules=DEFAULT_RULES):
+    """Apply a logical sharding constraint inside jit (mesh from context)."""
+    try:
+        mesh = _current_mesh()
+    except RuntimeError:
+        return x  # no mesh (single-device tests): no-op
+    spec = logical_to_spec(logical_axes, mesh, rules, dims=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _current_mesh() -> Mesh:
+    mesh = getattr(jax.sharding, "get_abstract_mesh", None)
+    # Prefer the thread-local physical mesh set by `with mesh:`.
+    env_mesh = jax._src.mesh.thread_resources.env.physical_mesh  # noqa: SLF001
+    if env_mesh is not None and not env_mesh.empty:
+        return env_mesh
+    raise RuntimeError("no mesh in context")
+
+
+def tree_shardings(mesh: Mesh, tree_logical, tree_shapes=None, rules=DEFAULT_RULES):
+    """Map a pytree of logical-axis tuples (+ optional shapes) to NamedShardings."""
+    if tree_shapes is None:
+        return jax.tree.map(
+            lambda ax: shard_logical(mesh, ax, rules),
+            tree_logical,
+            is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x),
+        )
+    return jax.tree.map(
+        lambda ax, shp: shard_logical(mesh, ax, rules, dims=shp),
+        tree_logical,
+        tree_shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x),
+    )

@@ -1,0 +1,10 @@
+from repro.train.step import (  # noqa: F401
+    TrainStepConfig,
+    build_train_step,
+    build_decode_step,
+    build_prefill_step,
+    input_specs,
+    train_state_shardings,
+    cache_shardings,
+    batch_shardings,
+)

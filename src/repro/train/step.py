@@ -1,0 +1,245 @@
+"""pjit train/serve step builders + sharding derivation.
+
+Everything the dry-run lowers comes from here: ``build_train_step`` /
+``build_decode_step`` / ``build_prefill_step`` return pure functions; the
+``*_shardings`` helpers derive NamedShardings for every carried pytree from
+the logical-axis trees (with shape-aware divisibility fallback), and
+``input_specs`` builds the ShapeDtypeStruct stand-ins for every model input
+— weak-type-correct, shardable, zero allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import transformer as T
+from repro.models.common import split_params
+from repro.models.config import ModelConfig, ShapeSpec
+from repro.optim import adamw
+from repro.sharding.rules import AxisRules, DEFAULT_RULES, logical_to_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    remat: str = "dots"  # none | dots | full
+    microbatches: int = 1
+    unroll: bool = False  # inline layer groups (dry-run cost calibration)
+    param_dtype: str = "float32"  # bfloat16 halves FSDP all-gather bytes
+    opt: adamw.AdamWConfig = dataclasses.field(default_factory=adamw.AdamWConfig)
+    lr_peak: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+def arch_rules(cfg: ModelConfig) -> AxisRules:
+    rules = DEFAULT_RULES
+    if cfg.attn_sharding == "seq":
+        rules = rules.overriding(seq="model", act_heads=None, act_qout=None)
+    if cfg.num_experts and cfg.expert_sharding == "replicated":
+        # small-MoE regime: EP dispatch is inherently ICI-bound, so expert
+        # weights replicate over `model` (still FSDP-sharded over `data`)
+        rules = rules.overriding(experts=None)
+    return rules
+
+
+def decode_rules(cfg: ModelConfig) -> AxisRules:
+    """Decode-time activation rules: q is [B,1,H,hd] (tiny) while the KV
+    cache's seq axis is model-sharded — sharding q heads over `model` too
+    forces XLA to all-gather the cache every layer (~20x decode bytes).
+    Replicating decode-time heads keeps attention a local partial-softmax +
+    psum (flash-decode).  §Perf iteration C1."""
+    return arch_rules(cfg).overriding(act_heads=None, act_qout=None)
+
+
+# ---------------------------------------------------------------------------
+# sharding derivation
+# ---------------------------------------------------------------------------
+
+def _axes_leaf(x):
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+
+
+def _shardings_from(mesh, axes_tree, shapes_tree, rules):
+    return jax.tree.map(
+        lambda ax, shp: NamedSharding(
+            mesh, logical_to_spec(ax, mesh, rules, dims=shp.shape)),
+        axes_tree, shapes_tree, is_leaf=_axes_leaf)
+
+
+def param_shapes_and_axes(cfg: ModelConfig, param_dtype: str = "float32"):
+    leaves = jax.eval_shape(
+        lambda k: T.init_lm(k, cfg), jax.random.PRNGKey(0))
+    values, axes = split_params(leaves)
+    if param_dtype != "float32":
+        pdt = jnp.dtype(param_dtype)
+        values = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, pdt)
+            if s.dtype == jnp.float32 else s, values)
+    return values, axes
+
+
+def train_state_shardings(cfg: ModelConfig, mesh: Mesh,
+                          opt_cfg: adamw.AdamWConfig,
+                          rules: Optional[AxisRules] = None,
+                          param_dtype: str = "float32"):
+    """-> (param_shapes, param_shardings, opt_shapes, opt_shardings)."""
+    rules = rules or arch_rules(cfg)
+    p_shapes, p_axes = param_shapes_and_axes(cfg, param_dtype)
+    p_shard = _shardings_from(mesh, p_axes, p_shapes, rules)
+    o_shapes = jax.eval_shape(lambda p: adamw.adamw_init(p, opt_cfg), p_shapes)
+
+    def _mu_axes(ax, shp):
+        """Moment axes mirror the parameter's; factored moments drop dims."""
+        if opt_cfg.factored and adamw._factorable(shp.shape):
+            v = {"row": ax[:-1], "col": ax[:-2] + ax[-1:]}
+        else:
+            v = ax
+        return {"m": ax, "v": v}
+
+    mu_axes = jax.tree.map(_mu_axes, p_axes, p_shapes, is_leaf=_axes_leaf)
+    o_axes = {"count": (), "mu": mu_axes}
+    o_shard = jax.tree.map(
+        lambda ax, shp: NamedSharding(
+            mesh, logical_to_spec(ax, mesh, rules, dims=shp.shape)),
+        o_axes, o_shapes, is_leaf=_axes_leaf)
+    return p_shapes, p_shard, o_shapes, o_shard
+
+
+def batch_logical_axes(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, tuple]:
+    axes = {"tokens": ("batch", None), "labels": ("batch", None)}
+    if cfg.frontend == "audio_frames":
+        axes["frames"] = ("batch", None, "act_embed")
+    if cfg.frontend == "image_patches":
+        axes["patch_embeds"] = ("batch", None, "act_embed")
+        axes["positions"] = (None, "batch", None)  # [3,B,S] m-rope ids
+    return axes
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this shape."""
+    B, S = shape.batch, shape.seq
+    f32 = jnp.float32
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+    elif shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    else:  # decode: one new token, cache of length S
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+            "positions": jax.ShapeDtypeStruct((B, 1), i32),
+        }
+    if cfg.frontend == "audio_frames" and shape.kind != "decode":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), f32)
+    if cfg.frontend == "image_patches" and shape.kind != "decode":
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_patches, cfg.d_model), f32)
+        if cfg.rope_kind == "mrope":
+            specs["positions"] = jax.ShapeDtypeStruct((3, B, S), i32)
+    return specs
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                    rules: Optional[AxisRules] = None):
+    rules = rules or arch_rules(cfg)
+    axes = batch_logical_axes(cfg, shape)
+    specs = input_specs(cfg, shape)
+    out = {}
+    for k, spec in specs.items():
+        ax = axes.get(k)
+        if k == "positions":  # [B,1] decode vs [3,B,S] m-rope prefill
+            ax = ((None, "batch", None) if len(spec.shape) == 3
+                  else ("batch", None))
+        if ax is None:
+            ax = ("batch",) + (None,) * (len(spec.shape) - 1)
+        out[k] = NamedSharding(mesh, logical_to_spec(
+            ax, mesh, rules, dims=spec.shape))
+    return out
+
+
+def cache_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                    rules: Optional[AxisRules] = None):
+    rules = rules or arch_rules(cfg)
+    shapes = jax.eval_shape(
+        lambda: T.init_cache(cfg, shape.batch, shape.seq))
+    axes = T.cache_logical_axes(cfg)
+    shard = jax.tree.map(
+        lambda ax, shp: NamedSharding(
+            mesh, logical_to_spec(ax, mesh, rules, dims=shp.shape)),
+        axes, shapes, is_leaf=_axes_leaf)
+    return shapes, shard
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg: ModelConfig, tcfg: TrainStepConfig):
+    """-> train_step(params, opt_state, batch, step) -> (params', opt', metrics)."""
+    from repro.optim.schedule import cosine_schedule
+
+    def loss_fn(params, batch):
+        return T.lm_loss(params, batch, cfg, remat=tcfg.remat,
+                         unroll=tcfg.unroll)
+
+    def train_step(params, opt_state, batch, step):
+        if tcfg.microbatches > 1:
+            # gradient accumulation over microbatches (scan keeps one
+            # microbatch's activations live at a time)
+            def micro(c, mb):
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                acc, n = c
+                acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), acc, g)
+                return (acc, n + 1), (l, m)
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape((tcfg.microbatches,
+                                     x.shape[0] // tcfg.microbatches)
+                                    + x.shape[1:]),
+                batch)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, _), (losses, metrics) = jax.lax.scan(
+                micro, (zero, 0), mbs)
+            grads = jax.tree.map(lambda g: g / tcfg.microbatches, gsum)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda x: x.mean(), metrics)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        lr = cosine_schedule(step, peak=tcfg.lr_peak,
+                             warmup_steps=tcfg.warmup_steps,
+                             total_steps=tcfg.total_steps)
+        params, opt_state, opt_metrics = adamw.adamw_update(
+            params, grads, opt_state, tcfg.opt, lr=lr)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        metrics["lr"] = lr
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def build_decode_step(cfg: ModelConfig, unroll: bool = False):
+    def decode_step(params, cache, tokens, positions):
+        return T.lm_decode_step(params, tokens, positions, cfg, cache,
+                                unroll=unroll)
+
+    return decode_step
+
+
+def build_prefill_step(cfg: ModelConfig, unroll: bool = False):
+    def prefill_step(params, cache, batch):
+        return T.lm_prefill(params, batch, cfg, cache, unroll=unroll)
+
+    return prefill_step

@@ -1,0 +1,121 @@
+"""Broker semantics (secondary queues, ordering) and sim-kernel behaviour."""
+import pytest
+
+from repro.broker.broker import Broker
+from repro.cluster.sim import Sim
+
+
+def test_sim_time_ordering():
+    sim = Sim()
+    log = []
+
+    def p(name, delay):
+        yield delay
+        log.append((sim.now, name))
+
+    sim.process(p("b", 2.0))
+    sim.process(p("a", 1.0))
+    sim.process(p("c", 3.0))
+    sim.run()
+    assert log == [(1.0, "a"), (2.0, "b"), (3.0, "c")]
+
+
+def test_sim_condition_wakeup():
+    sim = Sim()
+    cond = sim.condition()
+    got = []
+
+    def waiter():
+        v = yield cond
+        got.append((sim.now, v))
+
+    sim.process(waiter())
+    sim.call_at(5.0, lambda: cond.trigger("x"))
+    sim.run()
+    assert got == [(5.0, "x")]
+
+
+def test_sim_any_of():
+    sim = Sim()
+    c1, c2 = sim.condition(), sim.condition()
+    got = []
+
+    def waiter():
+        yield sim.any_of(c1, c2)
+        got.append(sim.now)
+
+    sim.process(waiter())
+    sim.call_at(3.0, c2.trigger)
+    sim.call_at(7.0, c1.trigger)
+    sim.run()
+    assert got == [3.0]
+
+
+def test_sub_process_return_values():
+    sim = Sim()
+
+    def child():
+        yield 1.0
+        return 42
+
+    def parent():
+        v = yield from child()
+        return v + 1
+
+    done = sim.process(parent())
+    sim.run()
+    assert done.value == 43
+
+
+def test_secondary_queue_mirrors_from_attach_point():
+    sim = Sim()
+    broker = Broker(sim)
+    broker.declare_queue("q")
+    broker.publish("q", {"n": 0})
+    sec = broker.attach_secondary("q")
+    broker.publish("q", {"n": 1})
+    broker.publish("q", {"n": 2})
+    assert sec.depth() == 2  # message 0 predates the attach
+    m1 = sec.try_get()
+    assert m1.msg_id == 1  # ids preserved across the mirror
+    broker.detach_secondary("q", sec.name)
+    broker.publish("q", {"n": 3})
+    assert sec.depth() == 1  # no mirroring after detach
+
+
+def test_queue_ids_monotone():
+    sim = Sim()
+    broker = Broker(sim)
+    q = broker.declare_queue("q")
+    ids = [broker.publish("q", {}).msg_id for _ in range(10)]
+    assert ids == list(range(10))
+    assert q.peek_last_id() == 9
+
+
+def test_pod_requeues_message_interrupted_by_pause(tmp_path):
+    """A message in service when the pod pauses returns to the queue front."""
+    from repro.cluster.cluster import Cluster
+    from repro.core import HashConsumer
+
+    cluster = Cluster(str(tmp_path), num_nodes=1)
+    sim, api, broker = cluster.sim, cluster.api, cluster.broker
+    q = broker.declare_queue("q")
+    worker = HashConsumer()
+
+    def boot():
+        pod = yield from api.create_pod("p", "node0", worker, q)
+        pod.start()
+        return pod
+
+    done = sim.process(boot())
+    broker.publish("q", {"token": 1})
+    sim.run(until=3.02)  # pod created at t=3; service takes 50 ms
+    pod = done.value
+    pod.pause()
+    sim.run(until=4.0)
+    assert worker.n_processed == 0
+    assert q.depth() == 1  # requeued, not lost
+    pod.resume()
+    pod.wake()
+    sim.run(until=5.0)
+    assert worker.n_processed == 1

@@ -1,0 +1,94 @@
+"""Unit + property tests for the Threshold-Based Cutoff math (Eqs. 1-5)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cutoff import (
+    CutoffController,
+    RateEstimator,
+    batched_cutoff_threshold,
+    cutoff_threshold,
+    expected_catchup_time,
+    replay_time_bound,
+    stable_for_live_migration,
+)
+
+pos = st.floats(min_value=1e-3, max_value=1e4, allow_nan=False,
+                allow_infinity=False)
+
+
+def test_eq5_paper_example():
+    # paper baseline: mu=20 msg/s; at lambda=4 and T_replay_max=45,
+    # T_cutoff = 45*20/4 = 225 s
+    assert cutoff_threshold(45.0, 20.0, 4.0) == pytest.approx(225.0)
+    assert cutoff_threshold(45.0, 20.0, 16.0) == pytest.approx(56.25)
+
+
+def test_zero_rate_is_unbounded():
+    assert cutoff_threshold(10.0, 20.0, 0.0) == math.inf
+
+
+@given(t=pos, mu=pos, lam=pos)
+@settings(max_examples=200, deadline=None)
+def test_eq5_guarantee(t, mu, lam):
+    """Replay of messages accumulated for exactly T_cutoff takes <= T_replay_max."""
+    t_cut = cutoff_threshold(t, mu, lam)
+    if math.isfinite(t_cut):
+        assert replay_time_bound(lam, t_cut, mu) <= t * (1 + 1e-9)
+
+
+@given(t=pos, mu=pos, lam=pos)
+@settings(max_examples=100, deadline=None)
+def test_threshold_monotonicity(t, mu, lam):
+    # higher lambda -> shorter admissible window; higher mu -> longer
+    assert cutoff_threshold(t, mu, 2 * lam) <= cutoff_threshold(t, mu, lam)
+    assert cutoff_threshold(t, 2 * mu, lam) >= cutoff_threshold(t, mu, lam)
+
+
+@given(t=pos, mu=pos, lam=pos,
+       speedup=st.floats(min_value=1.0, max_value=100.0))
+@settings(max_examples=100, deadline=None)
+def test_batched_threshold_extends_window(t, mu, lam, speedup):
+    assert batched_cutoff_threshold(t, mu, lam, speedup) >= \
+        cutoff_threshold(t, mu, lam) * (1 - 1e-9)
+
+
+def test_catchup_diverges_at_saturation():
+    assert expected_catchup_time(20.0, 20.0, 10.0) == math.inf
+    assert expected_catchup_time(21.0, 20.0, 10.0) == math.inf
+    assert expected_catchup_time(10.0, 20.0, 10.0) == pytest.approx(1.0)
+
+
+def test_stability_guard():
+    assert stable_for_live_migration(4.0, 20.0)
+    assert not stable_for_live_migration(19.5, 20.0)
+
+
+def test_rate_estimator_converges():
+    est = RateEstimator(halflife=5.0)
+    t = 0.0
+    for _ in range(500):
+        t += 0.1  # 10 events/s
+        est.observe(t)
+    assert est.rate == pytest.approx(10.0, rel=0.05)
+
+
+def test_controller_threshold_tracks_estimates():
+    c = CutoffController(t_replay_max=10.0, mu_fallback=20.0, lam_fallback=5.0,
+                         use_estimates=True)
+    # no observations -> fallbacks: 10*20/5 = 40
+    assert c.threshold() == pytest.approx(40.0)
+    t = 0.0
+    for _ in range(2000):
+        t += 0.05  # service events at 20/s
+        c.observe_service(t)
+    t = 0.0
+    for _ in range(1000):
+        t += 0.1  # arrivals at 10/s
+        c.observe_arrival(t)
+    assert c.threshold() == pytest.approx(10.0 * c.mu / c.lam, rel=1e-6)
+    assert c.mu == pytest.approx(20.0, rel=0.1)
+    assert c.lam == pytest.approx(10.0, rel=0.1)
+    assert c.should_cutoff(accum_started=0.0, now=c.threshold() + 1)
+    assert not c.should_cutoff(accum_started=0.0, now=c.threshold() - 1)

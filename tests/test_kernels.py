@@ -1,0 +1,194 @@
+"""Per-kernel correctness: Pallas (interpret mode) and blockwise-jnp
+formulations vs the naive oracles, swept over shapes/dtypes/masks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as pl_decode
+from repro.kernels.flash_attention import flash_attention as pl_flash
+from repro.kernels.rglru import rglru as pl_rglru
+
+TOL = dict(rtol=2e-2, atol=2e-3)  # bf16-friendly
+TOL32 = dict(rtol=1e-4, atol=1e-5)
+
+
+def _qkv(key, B, S, H, Hkv, D, dtype):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("B,S,H,Hkv,D", [
+    (1, 128, 4, 4, 64),    # MHA
+    (2, 256, 8, 2, 64),    # GQA 4:1
+    (1, 256, 4, 1, 128),   # MQA
+    (2, 128, 6, 3, 32),    # odd ratios
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window", [0, 64])
+def test_flash_attention_kernel(B, S, H, Hkv, D, dtype, window):
+    q, k, v = _qkv(jax.random.PRNGKey(0), B, S, H, Hkv, D, dtype)
+    want = ref.naive_attention(q, k, v, causal=True, window=window)
+    got = pl_flash(q, k, v, causal=True, window=window,
+                   block_q=64, block_k=64, interpret=True)
+    tol = TOL if dtype == jnp.bfloat16 else TOL32
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol)
+
+
+@pytest.mark.parametrize("block_k", [32, 128, 1024])
+def test_blockwise_attention_matches_naive(block_k):
+    q, k, v = _qkv(jax.random.PRNGKey(1), 2, 192, 4, 2, 64, jnp.float32)
+    want = ref.naive_attention(q, k, v, causal=True)
+    got = ref.blockwise_attention(q, k, v, causal=True, block_k=block_k)
+    np.testing.assert_allclose(got, want, **TOL32)
+
+
+def test_banded_local_attention_matches_naive():
+    q, k, v = _qkv(jax.random.PRNGKey(2), 2, 256, 4, 2, 64, jnp.float32)
+    want = ref.naive_attention(q, k, v, causal=True, window=64)
+    got = ref.banded_local_attention(q, k, v, window=64)
+    np.testing.assert_allclose(got, want, **TOL32)
+
+
+@pytest.mark.parametrize("B,S,H,Hkv,D", [(2, 256, 8, 2, 64), (1, 128, 4, 4, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_kernel(B, S, H, Hkv, D, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, D), dtype)
+    kc = jax.random.normal(ks[1], (B, S, Hkv, D), dtype)
+    vc = jax.random.normal(ks[2], (B, S, Hkv, D), dtype)
+    qpos = jnp.array([S // 2, S - 1][:B])
+    kpos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    kpos = jnp.where(kpos <= qpos[:, None], kpos, -1)
+    want = ref.decode_attention(q, kc, vc, q_pos=qpos, k_pos=kpos)
+    got = pl_decode(q, kc, vc, qpos, kpos, block_k=64, interpret=True)
+    tol = TOL if dtype == jnp.bfloat16 else TOL32
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol)
+
+
+@pytest.mark.parametrize("B,S,W", [(1, 64, 128), (2, 128, 256), (1, 96, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rglru_kernel(B, S, W, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    x = jax.random.normal(ks[0], (B, S, W), dtype)
+    ga = jax.random.normal(ks[1], (B, S, W), dtype)
+    gx = jax.random.normal(ks[2], (B, S, W), dtype)
+    a = jax.random.normal(ks[3], (W,), jnp.float32)
+    want_seq, want_last = ref.naive_rglru(x, a, ga, gx)
+    chunk = 32
+    got_seq, got_last = pl_rglru(x, a, ga, gx, block_w=128, chunk=chunk,
+                                 interpret=True)
+    tol = TOL if dtype == jnp.bfloat16 else TOL32
+    np.testing.assert_allclose(np.asarray(got_seq, np.float32),
+                               np.asarray(want_seq, np.float32), **tol)
+    np.testing.assert_allclose(got_last, want_last, **TOL32)
+
+
+def test_rglru_blockwise_matches_naive():
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    B, S, W = 2, 160, 48
+    x = jax.random.normal(ks[0], (B, S, W))
+    ga = jax.random.normal(ks[1], (B, S, W))
+    gx = jax.random.normal(ks[2], (B, S, W))
+    a = jax.random.normal(ks[3], (W,))
+    want_seq, want_last = ref.naive_rglru(x, a, ga, gx)
+    got_seq, got_last = ref.blockwise_rglru(x, a, ga, gx, block=32)
+    np.testing.assert_allclose(got_seq, want_seq, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(got_last, want_last, rtol=1e-3, atol=1e-4)
+
+
+def test_rglru_state_carry():
+    """Kernel with h0 continues exactly from a previous chunk."""
+    ks = jax.random.split(jax.random.PRNGKey(6), 4)
+    B, S, W = 1, 128, 128
+    x = jax.random.normal(ks[0], (B, S, W))
+    ga = jax.random.normal(ks[1], (B, S, W))
+    gx = jax.random.normal(ks[2], (B, S, W))
+    a = jax.random.normal(ks[3], (W,))
+    full_seq, full_last = ref.naive_rglru(x, a, ga, gx)
+    h_mid = ref.naive_rglru(x[:, :64], a, ga[:, :64], gx[:, :64])[1]
+    got_seq, got_last = pl_rglru(x[:, 64:], a, ga[:, 64:], gx[:, 64:],
+                                 h_mid, block_w=128, chunk=32, interpret=True)
+    np.testing.assert_allclose(got_last, full_last, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("B,S,H,D", [(1, 64, 2, 32), (2, 128, 4, 64)])
+@pytest.mark.parametrize("chunk", [32, 64])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mlstm_chunkwise_kernel(B, S, H, D, chunk, dtype):
+    from repro.kernels.mlstm import mlstm as pl_mlstm
+    ks = jax.random.split(jax.random.PRNGKey(9), 5)
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, H, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, H, D), dtype)
+    ig = jax.random.normal(ks[3], (B, S, H))
+    fg = jax.random.normal(ks[4], (B, S, H)) + 2.0
+    want, _ = ref.naive_mlstm(q.astype(jnp.float32), k.astype(jnp.float32),
+                              v.astype(jnp.float32), ig, fg)
+    got = pl_mlstm(q, k, v, ig, fg, chunk=chunk, interpret=True)
+    tol = dict(rtol=5e-2, atol=0.3) if dtype == jnp.bfloat16 else TOL32
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol)
+
+
+@pytest.mark.parametrize("B,S,H,hb", [(1, 32, 2, 16), (2, 64, 4, 32)])
+@pytest.mark.parametrize("chunk", [16, 32])
+def test_slstm_kernel(B, S, H, hb, chunk):
+    from repro.kernels.slstm import slstm as pl_slstm
+    W = H * hb
+    ks = jax.random.split(jax.random.PRNGKey(10), 8)
+    xi, xf, xz, xo = (jax.random.normal(k, (B, S, W)) for k in ks[:4])
+    ri, rf, rz, ro = (jax.random.normal(k, (H, hb, hb)) * 0.2
+                      for k in ks[4:])
+    want, _ = ref.naive_slstm(xi, xf, xz, xo, ri, rf, rz, ro)
+    got = pl_slstm(xi, xf, xz, xo, ri, rf, rz, ro, chunk=chunk,
+                   interpret=True)
+    np.testing.assert_allclose(got, want, **TOL32)
+
+
+def test_mlstm_scan_vs_decode_consistency():
+    B, S, H, D = 2, 32, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    ig = jax.random.normal(ks[3], (B, S, H))
+    fg = jax.random.normal(ks[4], (B, S, H)) + 2.0
+    hs, state = ref.naive_mlstm(q, k, v, ig, fg)
+    st = (jnp.zeros((B, H, D, D)), jnp.zeros((B, H, D)),
+          jnp.full((B, H), ref.NEG_INF))
+    outs = []
+    for t in range(S):
+        st, h = ref.mlstm_decode_step(st, q[:, t], k[:, t], v[:, t],
+                                      ig[:, t], fg[:, t])
+        outs.append(h)
+    np.testing.assert_allclose(jnp.stack(outs, 1), hs, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(st[0], state[0], rtol=1e-4, atol=1e-5)
+
+
+def test_chunk_attention_matches_decode_fold():
+    """lm_append's attention primitive == sequential decode attention."""
+    B, S, H, Hkv, D = 1, 64, 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(8), 3)
+    S_cache = 128
+    kc = jnp.zeros((B, S_cache, Hkv, D))
+    vc = jnp.zeros((B, S_cache, Hkv, D))
+    kpos = jnp.full((B, S_cache), -1, jnp.int32)
+    knew = jax.random.normal(ks[0], (B, S, Hkv, D))
+    vnew = jax.random.normal(ks[1], (B, S, Hkv, D))
+    q = jax.random.normal(ks[2], (B, S, H, D))
+    # populate cache with the chunk
+    kc = kc.at[:, :S].set(knew)
+    vc = vc.at[:, :S].set(vnew)
+    kpos = kpos.at[:, :S].set(jnp.arange(S)[None])
+    qpos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    got = ref.chunk_attention(q, kc, vc, q_pos=qpos, k_pos=kpos)
+    # reference: causal attention over the chunk
+    want = ref.naive_attention(q, knew, vnew, causal=True)
+    np.testing.assert_allclose(got, want, **TOL32)

@@ -1,0 +1,157 @@
+"""Optimizer, gradient compression, sharding rules, data pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    compress_gradients,
+    decompress_gradients,
+    ef_init,
+)
+
+
+def test_adamw_converges_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    params = {"x": jnp.array([3.0, -2.0, 1.5])}
+    state = adamw_init(params, cfg)
+    loss = lambda p: jnp.sum(p["x"] ** 2)
+    for _ in range(150):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw_update(params, g, state, cfg)
+    assert float(loss(params)) < 1e-3
+
+
+def test_adamw_weight_decay_shrinks():
+    cfg = AdamWConfig(lr=0.01, weight_decay=0.5)
+    params = {"w": jnp.ones((8,))}
+    state = adamw_init(params, cfg)
+    zero_grads = {"w": jnp.zeros((8,))}
+    for _ in range(10):
+        params, state, _ = adamw_update(params, zero_grads, state, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 1.0
+
+
+def test_factored_matches_full_direction():
+    """Factored 2nd moment approximates the full one (same step sign)."""
+    k = jax.random.PRNGKey(0)
+    g = jax.random.normal(k, (256, 256))
+    p = {"w": jnp.zeros((256, 256))}
+    full = AdamWConfig(lr=1e-2, weight_decay=0.0)
+    fact = AdamWConfig(lr=1e-2, weight_decay=0.0, factored=True)
+    sf = adamw_init(p, full)
+    sa = adamw_init(p, fact)
+    pf, _, _ = adamw_update(p, {"w": g}, sf, full)
+    pa, _, _ = adamw_update(p, {"w": g}, sa, fact)
+    # same sign on >99% of coordinates
+    agree = np.mean(np.sign(pf["w"]) == np.sign(pa["w"]))
+    assert agree > 0.99
+
+
+def test_grad_clipping():
+    from repro.optim import clip_by_global_norm
+    g = {"a": jnp.full((100,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(100.0)
+    from repro.optim import global_norm
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+@given(st.integers(min_value=1, max_value=2000),
+       st.integers(min_value=0, max_value=100))
+@settings(max_examples=25, deadline=None)
+def test_compression_error_feedback_bounded(n, seed):
+    """EF invariant: per-step dequant error is carried, not accumulated —
+    |residual| stays bounded by one quantization step."""
+    rng = np.random.default_rng(seed)
+    g = {"x": jnp.asarray(rng.normal(0, 1, n).astype(np.float32))}
+    ef = ef_init(g)
+    for _ in range(5):
+        comp, ef = compress_gradients(g, ef)
+        deq = decompress_gradients(comp, g)
+    scale = float(jnp.abs(g["x"]).max()) / 127.0
+    assert float(jnp.abs(ef["x"]).max()) <= scale * 1.01 + 1e-6
+
+
+def test_compression_roundtrip_small_error():
+    rng = np.random.default_rng(0)
+    g = {"x": jnp.asarray(rng.normal(0, 1, 4096).astype(np.float32))}
+    comp, _ = compress_gradients(g, ef_init(g))
+    deq = decompress_gradients(comp, g)
+    rel = float(jnp.linalg.norm(deq["x"] - g["x"]) / jnp.linalg.norm(g["x"]))
+    assert rel < 0.01
+    assert comp["x"]["q"].dtype == jnp.int8
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+def test_rules_divisibility_fallback():
+    import os
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding.rules import AxisRules, logical_to_spec
+    mesh = jax.make_mesh((1,), ("model",))
+    rules = AxisRules({"heads": "model", "mlp": "model"})
+    # size-1 axis divides everything
+    spec = logical_to_spec(("heads", "mlp"), mesh, rules, dims=(8, 128))
+    assert spec == P("model", None)  # 'model' consumed by first dim
+
+
+def test_rules_drop_nondivisible(monkeypatch):
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding.rules import AxisRules, logical_to_spec
+    # fake mesh with model=16 via the real helper on a 1-device mesh is not
+    # possible; emulate with a Mesh of 1 but patch size lookup
+    from repro.sharding import rules as R
+    mesh = jax.make_mesh((1,), ("model",))
+    monkeypatch.setattr(R, "_mesh_axis_size", lambda m, a: 16)
+    rules = AxisRules({"heads": "model"})
+    spec = logical_to_spec(("heads",), mesh, rules, dims=(15,))
+    assert spec == P(None)  # 15 % 16 != 0 -> dropped
+    assert rules.dropped
+
+
+def test_rules_absent_mesh_axes_filtered():
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding.rules import DEFAULT_RULES, logical_to_spec
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # 'batch' maps to ('pod','data'); 'pod' absent on single-pod mesh
+    spec = logical_to_spec(("batch", None), mesh, DEFAULT_RULES,
+                           dims=(8, 8))
+    assert spec == P("data", None)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_batches_deterministic():
+    from repro.data import DataConfig, SyntheticTokenDataset
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=4, seed=1)
+    ds1, ds2 = SyntheticTokenDataset(cfg), SyntheticTokenDataset(cfg)
+    b1, b2 = ds1.batch(7), ds2.batch(7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = ds1.batch(8)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+
+def test_data_host_sharding_partitions():
+    from repro.data import DataConfig, SyntheticTokenDataset
+    cfg = DataConfig(vocab_size=100, seq_len=8, global_batch=8, seed=0)
+    ds = SyntheticTokenDataset(cfg)
+    h0 = ds.batch(3, host_id=0, num_hosts=2)
+    h1 = ds.batch(3, host_id=1, num_hosts=2)
+    assert h0["tokens"].shape == (4, 8)
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+
+
+def test_labels_are_next_tokens():
+    from repro.data import DataConfig, SyntheticTokenDataset
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=2, seed=0)
+    b = SyntheticTokenDataset(cfg).batch(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
