@@ -8,6 +8,8 @@ the full result files under results/.
   fig12_14 phase_breakdown    — sub-process latency distribution
   claims   claims             — paper headline validation bands
   beyond   beyond_paper       — batched replay + registry dedup (ours)
+  delta    delta_precopy      — iterative delta checkpointing (ours)
+  fleet    fleet_migration    — N-pod orchestrated migration (ours)
 """
 from __future__ import annotations
 
@@ -73,6 +75,30 @@ def main() -> int:
         _csv(f"beyond/dedup_push_{r['push']}", 0.0,
              f"written={r['written_mb']}MB dedup={r['dedup_ratio']*100:.1f}%")
     print(f"# beyond_paper done in {time.time()-t:.1f}s", file=sys.stderr)
+
+    t = time.time()
+    from benchmarks.delta_precopy import run_delta_bytes, run_precopy_sweep
+    db = run_delta_bytes(out_path="results/delta_bytes.json")
+    _csv("delta/bytes", 0.0,
+         f"delta={db['delta_written_bytes']}B "
+         f"({db['delta_fraction']*100:.1f}% of full) "
+         f"smaller={db['delta_strictly_smaller']}")
+    for r in run_precopy_sweep(repeats=2,
+                               out_path="results/delta_precopy.json"):
+        _csv(f"delta/{r['profile']}@{r['rate']:g}r{r['max_rounds']}",
+             r["downtime_mean"],
+             f"replayed={r['replayed_mean']} "
+             f"final_round_bytes={r['final_round_bytes_mean']}")
+    print(f"# delta_precopy done in {time.time()-t:.1f}s", file=sys.stderr)
+
+    t = time.time()
+    from benchmarks.fleet_migration import run_fleet
+    for r in run_fleet(repeats=2, out_path="results/fleet_migration.json"):
+        _csv(f"fleet/{r['scenario']}", r["span_mean"],
+             f"peak_conc={r['peak_concurrency']} "
+             f"max_downtime={r['max_downtime_mean']}s "
+             f"verified={r['all_verified']}")
+    print(f"# fleet_migration done in {time.time()-t:.1f}s", file=sys.stderr)
 
     print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
     return 0

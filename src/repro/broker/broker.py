@@ -104,6 +104,9 @@ class Broker:
         self._mirrors[primary].append(sec_name)
         return sec
 
+    def is_mirrored(self, primary: str, sec_name: str) -> bool:
+        return sec_name in self._mirrors.get(primary, [])
+
     def detach_secondary(self, primary: str, sec_name: str):
         self._mirrors[primary].remove(sec_name)
 

@@ -12,9 +12,16 @@ Our unit of state is a well-typed pytree, so the "image" is:
   * manifest: pickled treedefs + per-leaf chunk lists, itself stored by
     hash; the image id is the manifest hash (immutable, verifiable —
     the "forensic" property).
+  * delta manifests: ``push_delta`` references a *parent* image id; the
+    wire cost of the push is only the chunks absent from the parent
+    (content addressing gives chunk-level diffing for free), which is
+    what makes iterative pre-copy rounds cheap — each round uploads the
+    dirty set since the previous checkpoint, not the whole state.
 
 Every push/pull returns a byte report; the cluster runtime charges
-virtual-clock transfer time from those bytes.
+virtual-clock transfer time from those bytes.  Pulls can be told which
+chunks the puller already holds (``have_chunks``) so a node that
+prefetched the parent image pays only for the delta.
 """
 from __future__ import annotations
 
@@ -38,9 +45,17 @@ CHUNK_BYTES = 4 * 1024 * 1024
 class PushReport:
     image_id: str
     total_bytes: int
-    written_bytes: int  # after dedup
+    written_bytes: int  # after dedup (new to the registry store)
     deduped_bytes: int
     num_chunks: int
+    parent_id: Optional[str] = None
+    # wire bytes relative to the parent image (== total_bytes for a full
+    # push): what a client holding the parent must upload
+    delta_bytes: int = -1
+
+    def __post_init__(self):
+        if self.delta_bytes < 0:
+            self.delta_bytes = self.total_bytes
 
 
 class ChunkStore:
@@ -102,30 +117,39 @@ def _leaf_from_bytes(data: bytes):
 class Registry:
     """The artifact registry: named state trees -> immutable images."""
 
-    def __init__(self, root: str):
+    def __init__(self, root: str, chunk_bytes: Optional[int] = None):
         self.store = ChunkStore(root)
         self.root = root
+        self.chunk_bytes = chunk_bytes or CHUNK_BYTES
         os.makedirs(os.path.join(root, "manifests"), exist_ok=True)
         self._tags: Dict[str, str] = {}
+        self._manifests: Dict[str, dict] = {}  # immutable => cache forever
         self._lock = threading.Lock()
 
     # -- push ---------------------------------------------------------------
-    def push_image(self, trees: Dict[str, Any], meta: Optional[dict] = None,
-                   tag: Optional[str] = None) -> PushReport:
-        total = written = n_chunks = 0
-        manifest: Dict[str, Any] = {"trees": {}, "meta": meta or {}}
+    def _push(self, trees: Dict[str, Any], meta: Optional[dict],
+              tag: Optional[str], parent: Optional[str]) -> PushReport:
+        parent_keys = (set(self.image_chunks(parent))
+                       if parent is not None else set())
+        total = written = delta = n_chunks = 0
+        manifest: Dict[str, Any] = {"trees": {}, "meta": meta or {},
+                                    "parent": parent,
+                                    "chunk_bytes": self.chunk_bytes}
         for name, tree in trees.items():
             leaves, treedef = jax.tree.flatten(tree)
             leaf_entries: List[dict] = []
             for leaf in leaves:
                 data = _leaf_to_bytes(leaf)
                 chunks = []
-                for off in range(0, len(data), CHUNK_BYTES):
-                    seg = data[off: off + CHUNK_BYTES]
+                for off in range(0, len(data), self.chunk_bytes):
+                    seg = data[off: off + self.chunk_bytes]
                     key, new = self.store.put(seg)
                     chunks.append(key)
                     total += len(seg)
                     written += len(seg) if new else 0
+                    if key not in parent_keys:
+                        delta += len(seg)
+                        parent_keys.add(key)  # count shared chunks once
                     n_chunks += 1
                 leaf_entries.append({"chunks": chunks, "nbytes": len(data)})
             manifest["trees"][name] = {
@@ -142,30 +166,96 @@ class Registry:
         if tag:
             with self._lock:
                 self._tags[tag] = image_id
-        return PushReport(image_id, total, written, total - written, n_chunks)
+        return PushReport(image_id, total, written, total - written, n_chunks,
+                          parent_id=parent,
+                          delta_bytes=delta if parent is not None else total)
+
+    def push_image(self, trees: Dict[str, Any], meta: Optional[dict] = None,
+                   tag: Optional[str] = None) -> PushReport:
+        return self._push(trees, meta, tag, parent=None)
+
+    def push_delta(self, trees: Dict[str, Any], parent_image_id: str,
+                   meta: Optional[dict] = None,
+                   tag: Optional[str] = None) -> PushReport:
+        """Delta push: the manifest still lists *every* chunk (a delta image
+        is self-contained and immutable), but the wire cost — and the
+        report's ``delta_bytes`` — covers only chunks absent from the
+        parent image."""
+        return self._push(trees, meta, tag, parent=parent_image_id)
 
     # -- pull ---------------------------------------------------------------
-    def pull_image(self, image_id: str) -> Tuple[Dict[str, Any], int]:
-        """-> (trees, bytes_pulled)."""
+    def _manifest(self, image_id: str) -> dict:
+        """Manifests are content-addressed (immutable), so a restore's
+        pull/chunk-map/meta triple parses the file once, not three times."""
+        cached = self._manifests.get(image_id)
+        if cached is not None:
+            return cached
         path = os.path.join(self.root, "manifests", image_id + ".json")
         with open(path, "rb") as f:
             manifest = json.loads(f.read())
+        with self._lock:
+            self._manifests[image_id] = manifest
+        return manifest
+
+    def pull_image(self, image_id: str,
+                   have_chunks: Optional[set] = None
+                   ) -> Tuple[Dict[str, Any], int]:
+        """-> (trees, bytes_pulled).
+
+        With ``have_chunks`` (the puller's local chunk cache), only missing
+        chunks are charged.  Accounting is per distinct chunk — each chunk
+        crosses the wire at most once per pull regardless of how many
+        leaves reference it — so a cold pull and a pull with an empty cache
+        charge identically, and a node that prefetched the parent image
+        pays only for the delta."""
+        manifest = self._manifest(image_id)
+        chunk_bytes = manifest.get("chunk_bytes") or self.chunk_bytes
         trees = {}
         pulled = 0
+        seen = set(have_chunks or ())
         for name, spec in manifest["trees"].items():
             treedef = pickle.loads(bytes.fromhex(spec["treedef"]))
             leaves = []
             for entry in spec["leaves"]:
                 data = b"".join(self.store.get(k) for k in entry["chunks"])
-                pulled += entry["nbytes"]
+                off = 0
+                for k in entry["chunks"]:
+                    size = min(chunk_bytes, entry["nbytes"] - off)
+                    if k not in seen:
+                        pulled += size
+                        seen.add(k)
+                    off += size
                 leaves.append(_leaf_from_bytes(data))
             trees[name] = jax.tree.unflatten(treedef, leaves)
         return trees, pulled
 
+    def image_chunks(self, image_id: str) -> Dict[str, int]:
+        """Chunk key -> byte size for every chunk of the image."""
+        manifest = self._manifest(image_id)
+        chunk_bytes = manifest.get("chunk_bytes") or self.chunk_bytes
+        out: Dict[str, int] = {}
+        for spec in manifest["trees"].values():
+            for entry in spec["leaves"]:
+                off = 0
+                for k in entry["chunks"]:
+                    out[k] = min(chunk_bytes, entry["nbytes"] - off)
+                    off += chunk_bytes
+        return out
+
+    def image_parent(self, image_id: str) -> Optional[str]:
+        return self._manifest(image_id).get("parent")
+
+    def delta_chain(self, image_id: str) -> List[str]:
+        """Forensic lineage: [image_id, parent, grandparent, ...]."""
+        chain = [image_id]
+        while True:
+            parent = self.image_parent(chain[-1])
+            if parent is None:
+                return chain
+            chain.append(parent)
+
     def image_meta(self, image_id: str) -> dict:
-        path = os.path.join(self.root, "manifests", image_id + ".json")
-        with open(path, "rb") as f:
-            return json.loads(f.read())["meta"]
+        return self._manifest(image_id)["meta"]
 
     def resolve(self, tag: str) -> Optional[str]:
         with self._lock:

@@ -36,6 +36,7 @@ class TimingConstants:
 
     checkpoint_s: float = 8.0          # FCC/CRIU dump of the pod
     image_build_s: float = 11.0        # buildah OCI image assembly
+    delta_build_s: float = 2.5         # incremental layer assembly (pre-copy)
     push_base_s: float = 6.0           # registry round-trips
     pull_base_s: float = 5.0
     registry_bw_Bps: float = 200e6     # artifact registry bandwidth
@@ -56,6 +57,9 @@ class Node:
         self.alive = True
         self.pods: Dict[str, "Pod"] = {}
         self.last_heartbeat = 0.0
+        # local image-layer cache (chunk keys): prefetched/pulled chunks are
+        # free on later pulls — how pre-copy makes the final restore cheap
+        self.image_chunks: set = set()
 
 
 class Pod:
@@ -76,9 +80,31 @@ class Pod:
         self.deleted = False
         self.paused = False
         self.service_log: List[tuple] = []  # (virtual_time, msg_id)
+        # single-slot hook (owned by the workload) + removable listeners
+        # (owned by migrations, which must deregister on completion)
         self.on_processed: Optional[Callable] = None
+        self.on_processed_listeners: List[Callable] = []
+        self.in_flight = None  # message popped but not yet folded/requeued
         self._loop_started = False
         self._wake: Optional[Condition] = None
+
+    @property
+    def busy(self) -> bool:
+        """True while a popped message is mid-service (in flight)."""
+        return self.in_flight is not None
+
+    def add_on_processed(self, fn: Callable):
+        self.on_processed_listeners.append(fn)
+
+    def remove_on_processed(self, fn: Callable):
+        if fn in self.on_processed_listeners:
+            self.on_processed_listeners.remove(fn)
+
+    def _notify_processed(self, msg):
+        if self.on_processed:
+            self.on_processed(self, msg)
+        for fn in list(self.on_processed_listeners):
+            fn(self, msg)
 
     # -- service loop ---------------------------------------------------------
     def start(self):
@@ -121,15 +147,17 @@ class Pod:
             skip_until = getattr(self.worker, "skip_until", -1)
             if msg.msg_id <= max(skip_until, self.worker.last_msg_id):
                 continue
+            self.in_flight = msg
             yield self.processing_ms / 1000.0  # service time (virtual)
             if self.deleted or self.paused:
                 # interrupted mid-service: message returns to the queue
                 self.queue.requeue_front(msg)
+                self.in_flight = None
                 continue
             self.worker.process(msg)  # real JAX state update
+            self.in_flight = None
             self.service_log.append((self.sim.now, msg.msg_id))
-            if self.on_processed:
-                self.on_processed(self, msg)
+            self._notify_processed(msg)
 
 
 class StatefulSetController:
@@ -239,15 +267,56 @@ class APIServer:
                   written=report.written_bytes, deduped=report.deduped_bytes)
         return report
 
-    def pull_and_restore(self, image_id: str, worker) -> Generator:
-        """Target node: pull from registry, restore worker state."""
+    def push_delta_image(self, checkpoint: dict, tag: str,
+                         parent_image_id: str) -> Generator:
+        """Pre-copy round: delta layer vs the parent image — the wire only
+        carries chunks the registry doesn't already hold."""
         t = self.timings
-        trees, pulled = self.registry.pull_image(image_id)
+        yield t.delta_build_s
+        report = self.registry.push_delta(
+            {"state": checkpoint["state"]}, parent_image_id,
+            meta={"last_msg_id": int(checkpoint["last_msg_id"]), "tag": tag},
+            tag=tag,
+        )
+        yield t.push_base_s + report.written_bytes / t.registry_bw_Bps
+        self._log("delta_pushed", tag=tag, image_id=report.image_id,
+                  parent=parent_image_id, delta=report.delta_bytes,
+                  written=report.written_bytes)
+        return report
+
+    def prefetch_image(self, node_name: str, image_id: str) -> Generator:
+        """Warm a node's layer cache while the source keeps serving; the
+        final restore then pulls only what prefetching missed."""
+        t = self.timings
+        node = self.nodes[node_name]
+        chunks = self.registry.image_chunks(image_id)
+        new_bytes = sum(size for key, size in chunks.items()
+                        if key not in node.image_chunks)
+        yield t.pull_base_s + new_bytes / t.registry_bw_Bps
+        # cache only after the transfer lands: a concurrent pull to the same
+        # node must not ride for free on bytes still in flight
+        node.image_chunks.update(chunks)
+        self._log("image_prefetched", node=node_name, image_id=image_id,
+                  bytes=new_bytes)
+        return new_bytes
+
+    def pull_and_restore(self, image_id: str, worker,
+                         node_name: Optional[str] = None) -> Generator:
+        """Target node: pull from registry, restore worker state.  With
+        ``node_name``, the node's layer cache discounts already-held
+        chunks (and is updated with the pulled ones)."""
+        t = self.timings
+        node = self.nodes[node_name] if node_name is not None else None
+        trees, pulled = self.registry.pull_image(
+            image_id,
+            have_chunks=node.image_chunks if node is not None else None)
         yield t.pull_base_s + pulled / t.registry_bw_Bps
+        if node is not None:  # cache after the transfer lands (see prefetch)
+            node.image_chunks.update(self.registry.image_chunks(image_id))
         yield t.restore_s
         worker.load_state(trees["state"])
         meta = self.registry.image_meta(image_id)
-        self._log("restored", image_id=image_id,
+        self._log("restored", image_id=image_id, pulled=pulled,
                   last_msg_id=meta.get("last_msg_id"))
         return meta
 
@@ -273,10 +342,11 @@ class Cluster:
 
     def __init__(self, registry_root: str,
                  timings: Optional[TimingConstants] = None,
-                 num_nodes: int = 3):
+                 num_nodes: int = 3,
+                 chunk_bytes: Optional[int] = None):
         self.sim = Sim()
         self.broker = Broker(self.sim)
-        self.registry = Registry(registry_root)
+        self.registry = Registry(registry_root, chunk_bytes=chunk_bytes)
         self.timings = timings or TimingConstants()
         self.api = APIServer(self.sim, self.broker, self.registry, self.timings)
         for i in range(num_nodes):

@@ -11,6 +11,12 @@ from repro.core.cutoff import (  # noqa: F401
     replay_time_bound,
 )
 from repro.core.migration import MigrationManager, MigrationReport  # noqa: F401
+from repro.core.orchestrator import (  # noqa: F401
+    ClusterMigrationOrchestrator,
+    FleetReport,
+    PodMigrationSpec,
+    run_fleet_experiment,
+)
 from repro.core.workload import (  # noqa: F401
     ExperimentResult,
     HashConsumer,

@@ -86,7 +86,21 @@ class ExperimentResult:
             "phases": {k: round(v, 3) for k, v in self.report.phases.items()},
             "image_written_bytes": self.report.image_written_bytes,
             "image_deduped_bytes": self.report.image_deduped_bytes,
+            "precopy_rounds": self.report.precopy_rounds,
+            "precopy_round_bytes": list(self.report.precopy_round_bytes),
         }
+
+
+def reference_fold(make_worker: Callable, tokens: List[int], upto: int):
+    """Independent correctness oracle: a fresh worker folds the published
+    token log 0..upto from scratch (ids reassigned 0..upto, matching the
+    broker's per-queue monotonic ids)."""
+    from repro.broker.broker import Message
+
+    ref = make_worker()
+    for i, tok in enumerate(tokens[: upto + 1]):
+        ref.process(Message(i, {"token": tok}, 0.0))
+    return ref
 
 
 def make_jax_worker_factory(max_seq: int = 512):
@@ -120,10 +134,14 @@ def run_migration_experiment(
     replay_speedup: float = 1.0,
     settle_time: float = 5.0,
     verify: bool = True,
+    precopy: bool = False,
+    chunk_bytes: Optional[int] = None,
+    manager_kwargs: Optional[Dict[str, Any]] = None,
 ) -> ExperimentResult:
     timings = timings or TimingConstants()
     timings = dataclasses.replace(timings, processing_ms=processing_ms)
-    cluster = Cluster(registry_root, timings=timings, num_nodes=3)
+    cluster = Cluster(registry_root, timings=timings, num_nodes=3,
+                      chunk_bytes=chunk_bytes)
     sim, api, broker = cluster.sim, cluster.api, cluster.broker
     primary = broker.declare_queue("orders")
 
@@ -168,7 +186,8 @@ def run_migration_experiment(
     # -- migration -------------------------------------------------------------
     mgr = MigrationManager(api, make_worker, "orders", cutoff=cutoff,
                            batched_replay=batched_replay,
-                           replay_speedup=replay_speedup if batched_replay else 1.0)
+                           replay_speedup=replay_speedup if batched_replay else 1.0,
+                           precopy=precopy, **(manager_kwargs or {}))
     done = mgr.migrate(strategy, source, "node1")
     sim.run(stop_when=done)
     report, target = done.value
@@ -181,12 +200,7 @@ def run_migration_experiment(
     # -- verification: reference fold of the full log --------------------------
     verified = True
     if verify:
-        from repro.broker.broker import Message
-
-        ref = make_worker()
-        upto = target.worker.last_msg_id
-        for i, tok in enumerate(published[: upto + 1]):
-            ref.process(Message(i, {"token": tok}, 0.0))
+        ref = reference_fold(make_worker, published, target.worker.last_msg_id)
         verified = ref.state_equal(target.worker, exact=not batched_replay)
 
     return ExperimentResult(

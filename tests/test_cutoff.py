@@ -2,7 +2,8 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.cutoff import (
     CutoffController,

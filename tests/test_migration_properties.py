@@ -12,7 +12,8 @@ bounded near λ·T_cutoff/μ.
 import os
 
 import pytest
-from hypothesis import HealthCheck, given, settings, strategies as st
+pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings, strategies as st  # noqa: E402
 
 from repro.core import run_migration_experiment
 

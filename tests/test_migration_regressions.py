@@ -1,0 +1,230 @@
+"""Regression tests for two seed bugs in the MigrationManager:
+
+1. ``_drain_condition`` short-circuited on ``secondary.depth() == 0`` even
+   while the target was still below ``up_to_id`` — a momentarily-empty
+   mirror (last mirrored message in flight, mid-service) triggered a
+   premature cutover before the target's state was caught up.
+2. ``_sync_condition`` chained a closure onto ``source.on_processed`` per
+   migration and never removed it, so repeated migrations of the same
+   lineage (the orchestrator's bread and butter) kept firing stale checks
+   against deleted pods.
+"""
+from repro.cluster.cluster import Cluster
+from repro.core import HashConsumer, MigrationManager
+
+
+def _mk_cluster(tmp_path):
+    cluster = Cluster(str(tmp_path / "reg"), num_nodes=3)
+    cluster.broker.declare_queue("orders")
+    return cluster
+
+
+def test_drain_condition_waits_for_in_flight_message(tmp_path):
+    cluster = _mk_cluster(tmp_path)
+    sim, api, broker = cluster.sim, cluster.api, cluster.broker
+    sec = broker.attach_secondary("orders", "orders.sec")
+    broker.publish("orders", {"token": 1})  # id 0, mirrored into sec
+
+    worker = HashConsumer()
+    holder = {}
+
+    def boot():
+        pod = yield from api.create_pod("t", "node1", worker, sec)
+        pod.start()
+        holder["pod"] = pod
+
+    sim.process(boot())
+    mgr = MigrationManager(api, HashConsumer, "orders")
+    probe = {}
+
+    def drain_probe():
+        # pod_create_s = 3.0: the pod pops msg 0 at t=3.0 and services it
+        # for processing_ms = 50ms.  Open the drain mid-service: the mirror
+        # is momentarily empty but the message is in flight.
+        yield 3.02
+        pod = holder["pod"]
+        probe["busy_at_call"] = pod.busy
+        probe["depth_at_call"] = sec.depth()
+        cond = mgr._drain_condition(pod, 0, sec, [])
+        probe["premature"] = cond.triggered  # seed bug: True
+        yield cond
+        probe["last_at_trigger"] = pod.worker.last_msg_id
+
+    sim.process(drain_probe())
+    sim.run(until=10.0)
+
+    assert probe["depth_at_call"] == 0 and probe["busy_at_call"]
+    assert probe["premature"] is False  # must wait for the in-flight fold
+    assert probe["last_at_trigger"] == 0  # and trigger once it lands
+
+
+def test_drain_condition_still_short_circuits_when_idle(tmp_path):
+    """The empty-mirror escape must survive for ids the mirror can never
+    deliver (consumed from the primary before the secondary attached)."""
+    cluster = _mk_cluster(tmp_path)
+    sim, api, broker = cluster.sim, cluster.api, cluster.broker
+    sec = broker.attach_secondary("orders", "orders.sec")
+    worker = HashConsumer()
+    worker.last_msg_id = 3  # restored marker below the requested id
+    holder = {}
+
+    def boot():
+        pod = yield from api.create_pod("t", "node1", worker, sec)
+        pod.start()
+        holder["pod"] = pod
+
+    sim.process(boot())
+    mgr = MigrationManager(api, HashConsumer, "orders")
+    probe = {}
+
+    def drain_probe():
+        yield 5.0  # mirror empty, pod idle
+        cond = mgr._drain_condition(holder["pod"], 7, sec, [])
+        probe["triggered"] = cond.triggered
+
+    sim.process(drain_probe())
+    sim.run(until=6.0)
+    assert probe["triggered"] is True  # no deadlock on undeliverable ids
+
+
+def _run_one_migration(cluster, mgr, source, target_node):
+    sim = cluster.sim
+    done = mgr.migrate("ms2m_individual", source, target_node)
+    sim.run(stop_when=done)
+    return done.value
+
+
+def test_processed_callbacks_deregistered_after_migration(tmp_path):
+    cluster = _mk_cluster(tmp_path)
+    sim, api, broker = cluster.sim, cluster.api, cluster.broker
+    stop = {"flag": False}
+
+    def producer():
+        while not stop["flag"]:
+            yield 0.1
+            broker.publish("orders", {"token": 42})
+
+    sim.process(producer())
+    holder = {}
+
+    def boot():
+        pod = yield from api.create_pod("consumer-0", "node0", HashConsumer(),
+                                        broker.queues["orders"])
+        pod.start()
+        holder["pod"] = pod
+
+    sim.process(boot())
+    sim.run(until=5.0)
+    source = holder["pod"]
+
+    calls = []
+    sentinel = lambda p, m: calls.append(p.name)  # noqa: E731
+    source.on_processed = sentinel  # the workload's own hook
+
+    mgr = MigrationManager(api, HashConsumer, "orders")
+    rep1, target1 = _run_one_migration(cluster, mgr, source, "node1")
+
+    # migration listeners are gone from both endpoints; the workload hook
+    # survives untouched (not wrapped, not dropped)
+    assert source.on_processed_listeners == []
+    assert target1.on_processed_listeners == []
+    assert source.on_processed is sentinel
+
+    # second migration of the same lineage (orchestrator scenario): the
+    # stale-closure leak used to fire dead-pod checks here
+    rep2, target2 = _run_one_migration(cluster, mgr, target1, "node2")
+    assert target1.on_processed_listeners == []
+    assert target2.on_processed_listeners == []
+    assert rep2.strategy == "ms2m_individual"
+
+    stop["flag"] = True
+    sim.run(until=sim.now + 1.0)
+    assert target2.worker.n_processed > 0
+
+
+def test_concurrent_migrations_on_one_queue_get_distinct_secondaries(tmp_path):
+    """Seed bug (reachable via the orchestrator): two migrate() calls on one
+    manager before either generator ran both read the post-increment ``_n``
+    and attached the SAME secondary queue, double-mirroring it and
+    deadlocking both migrations."""
+    cluster = _mk_cluster(tmp_path)
+    sim, api, broker = cluster.sim, cluster.api, cluster.broker
+    stop = {"flag": False}
+
+    def producer():
+        while not stop["flag"]:
+            yield 0.1
+            broker.publish("orders", {"token": 9})
+
+    sim.process(producer())
+    holder = {}
+    for i in range(2):
+        def boot(i=i):
+            pod = yield from api.create_pod(
+                f"c{i}", f"node{i}", HashConsumer(), broker.queues["orders"])
+            pod.start()
+            holder[i] = pod
+
+        sim.process(boot())
+    sim.run(until=5.0)
+
+    mgr = MigrationManager(api, HashConsumer, "orders")
+    done0 = mgr.migrate("ms2m_individual", holder[0], "node2")
+    done1 = mgr.migrate("ms2m_individual", holder[1], "node2")
+    sim.run(until=sim.now + 400.0)
+    stop["flag"] = True
+
+    assert done0.triggered and done1.triggered  # seed bug: neither completes
+    # distinct mirrors, both detached again after cutover
+    assert broker._mirrors["orders"] == []
+    t0, t1 = done0.value[1], done1.value[1]
+    assert t0.name != t1.name
+
+
+def test_failed_migration_detaches_its_mirror(tmp_path):
+    """A migration that dies mid-flight (target node killed) must not leave
+    its secondary attached, or every future publish is double-buffered into
+    a queue nothing drains."""
+    import pytest
+
+    cluster = _mk_cluster(tmp_path)
+    sim, api, broker = cluster.sim, cluster.api, cluster.broker
+    stop = {"flag": False}
+
+    def producer():
+        while not stop["flag"]:
+            yield 0.1
+            broker.publish("orders", {"token": 5})
+
+    sim.process(producer())
+    holder = {}
+
+    def boot():
+        pod = yield from api.create_pod("c0", "node0", HashConsumer(),
+                                        broker.queues["orders"])
+        pod.start()
+        holder["pod"] = pod
+
+    sim.process(boot())
+    sim.run(until=5.0)
+    api.kill_node("node2")  # target dies before the migration starts
+
+    mgr = MigrationManager(api, HashConsumer, "orders")
+    mgr.migrate("ms2m_individual", holder["pod"], "node2")
+    with pytest.raises(RuntimeError, match="dead"):
+        sim.run(until=sim.now + 100.0)
+    stop["flag"] = True
+    assert broker._mirrors["orders"] == []  # seed bug: orphan mirror left
+
+
+def test_identity_handoff_rejected_for_non_statefulset_strategies(tmp_path):
+    """Non-StatefulSet strategies delete the source without releasing its
+    identity; passing one must fail fast instead of leaking the claim to a
+    dead pod."""
+    import pytest
+
+    cluster = _mk_cluster(tmp_path)
+    mgr = MigrationManager(cluster.api, HashConsumer, "orders")
+    with pytest.raises(ValueError, match="ms2m_statefulset"):
+        mgr.migrate("ms2m_individual", None, "node1",
+                    statefulset_identity="consumer-0")
