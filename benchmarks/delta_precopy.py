@@ -26,7 +26,7 @@ import numpy as np
 
 from repro.checkpoint import Registry
 from repro.cluster.cluster import TimingConstants
-from repro.core import run_migration_experiment
+from repro.core import MigrationPolicy, run_migration_experiment
 from repro.core.workload import HashConsumer
 
 # WAN-ish profile: fast control plane, slow registry link — transfer time
@@ -131,8 +131,9 @@ def run_precopy_sweep(repeats: int = 3,
                                 timings, processing_ms=50.0),
                             worker_factory=BigStateConsumer,
                             chunk_bytes=64 * 1024,
-                            precopy=budget > 0,
-                            manager_kwargs={"precopy_max_rounds": budget},
+                            policy=MigrationPolicy(
+                                precopy=budget > 0,
+                                precopy_max_rounds=budget),
                         )
                     assert r.verified, (profile, rate, budget)
                     downs.append(r.downtime)

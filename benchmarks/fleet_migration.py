@@ -27,6 +27,7 @@ def run_fleet(repeats: int = 2, n_pods: int = 6,
         ("parallel/ms2m@c2", "parallel", "ms2m_individual", 2),
         ("parallel/ms2m@c4", "parallel", "ms2m_individual", 4),
         ("parallel/precopy@c4", "parallel", "ms2m_precopy", 4),
+        ("parallel/adaptive@c4", "parallel", "ms2m_adaptive", 4),
         ("rolling/statefulset", "rolling", "ms2m_statefulset", 1),
         ("drain/ms2m@c4", "drain", "ms2m_individual", 4),
     ]

@@ -21,8 +21,10 @@ STRATEGIES = ("stop_and_copy", "ms2m_individual", "ms2m_cutoff",
 
 
 def run_sweep(strategies=STRATEGIES, rates=C.SWEEP_RATES, repeats=3,
-              out_path=None, use_jax_consumer=False, batched_replay=False,
-              replay_speedup=1.0, t_replay_max=C.T_REPLAY_MAX):
+              out_path=None, use_jax_consumer=False, batched_replay=None,
+              replay_speedup=None, t_replay_max=C.T_REPLAY_MAX, policy=None):
+    # legacy knobs default to None ("unset") so an explicit policy= is not
+    # silently overridden by their old False/1.0 defaults
     worker_factory = None
     if use_jax_consumer:
         from repro.core import make_jax_worker_factory
@@ -41,6 +43,7 @@ def run_sweep(strategies=STRATEGIES, rates=C.SWEEP_RATES, repeats=3,
                         t_replay_max=t_replay_max,
                         seed=rep,
                         worker_factory=worker_factory,
+                        policy=policy,
                         batched_replay=batched_replay,
                         replay_speedup=replay_speedup,
                     )
@@ -73,7 +76,9 @@ def run_sweep(strategies=STRATEGIES, rates=C.SWEEP_RATES, repeats=3,
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--repeats", type=int, default=C.REPEATS)
-    ap.add_argument("--strategy", default="all")
+    ap.add_argument("--strategy", default="all",
+                    help="'all' = the paper's four; any registry name "
+                         "(e.g. ms2m_precopy, ms2m_adaptive) also works")
     ap.add_argument("--rates", default=",".join(str(r) for r in C.SWEEP_RATES))
     ap.add_argument("--jax-consumer", action="store_true")
     ap.add_argument("--out", default="results/migration_sweep.json")

@@ -10,9 +10,15 @@ the full result files under results/.
   beyond   beyond_paper       — batched replay + registry dedup (ours)
   delta    delta_precopy      — iterative delta checkpointing (ours)
   fleet    fleet_migration    — N-pod orchestrated migration (ours)
+
+``--quick`` is the CI smoke profile: repeats=1, the paper rates only,
+hash-fold consumers everywhere (the JAX-compute sections are skipped), and
+the adaptive registry strategy exercised alongside the paper's four.  It
+still writes the same results/*.json files so CI can upload them.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 
@@ -21,19 +27,33 @@ def _csv(name: str, seconds: float, derived: str):
     print(f"{name},{seconds * 1e6:.1f},{derived}")
 
 
-def main() -> int:
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke profile: 1 repeat, paper rates, no "
+                         "JAX-compute sections")
+    args = ap.parse_args(argv)
+
     t0 = time.time()
     from benchmarks.migration_sweep import run_sweep
     from benchmarks.rate_scenarios import run_scenarios
     from benchmarks.phase_breakdown import run_breakdown
     from benchmarks.claims import run_claims
-    from benchmarks.beyond_paper import run_batched_replay_bench, run_dedup_bench
     from benchmarks import constants as C
 
-    repeats = 3  # full paper protocol (10) via: python -m benchmarks.claims
+    repeats = 1 if args.quick else 3  # full paper protocol (10): benchmarks.claims
+    sweep_kwargs = {}
+    if args.quick:
+        sweep_kwargs = {
+            "strategies": ("stop_and_copy", "ms2m_individual", "ms2m_cutoff",
+                           "ms2m_statefulset", "ms2m_precopy",
+                           "ms2m_adaptive"),
+            "rates": C.PAPER_RATES,
+        }
 
     t = time.time()
-    sweep = run_sweep(repeats=repeats, out_path="results/migration_sweep.json")
+    sweep = run_sweep(repeats=repeats, out_path="results/migration_sweep.json",
+                      **sweep_kwargs)
     for r in sweep:
         if r["rate"] in C.PAPER_RATES:
             _csv(f"fig5_8/{r['strategy']}@{r['rate']:g}",
@@ -62,28 +82,32 @@ def main() -> int:
     _csv("claims/validated", time.time() - t, f"{npass}/{len(claims)} bands pass")
     print(f"# claims done in {time.time()-t:.1f}s", file=sys.stderr)
 
-    t = time.time()
-    rows = run_batched_replay_bench(repeats=2,
-                                    out_path="results/beyond_paper.json")
-    speedup = rows[0]["measured_replay_speedup"]
-    _csv("beyond/replay_speedup", 0.0, f"{speedup}x chunk-parallel replay")
-    for r in rows[1:]:
-        _csv(f"beyond/{r['variant']}@{r['rate']:g}", r["migration_time_mean"],
-             f"downtime={r['downtime_mean']}s")
-    dd = run_dedup_bench(out_path="results/beyond_paper_dedup.json")
-    for r in dd:
-        _csv(f"beyond/dedup_push_{r['push']}", 0.0,
-             f"written={r['written_mb']}MB dedup={r['dedup_ratio']*100:.1f}%")
-    print(f"# beyond_paper done in {time.time()-t:.1f}s", file=sys.stderr)
+    if not args.quick:
+        t = time.time()
+        from benchmarks.beyond_paper import (run_batched_replay_bench,
+                                             run_dedup_bench)
+        rows = run_batched_replay_bench(repeats=2,
+                                        out_path="results/beyond_paper.json")
+        speedup = rows[0]["measured_replay_speedup"]
+        _csv("beyond/replay_speedup", 0.0, f"{speedup}x chunk-parallel replay")
+        for r in rows[1:]:
+            _csv(f"beyond/{r['variant']}@{r['rate']:g}",
+                 r["migration_time_mean"], f"downtime={r['downtime_mean']}s")
+        dd = run_dedup_bench(out_path="results/beyond_paper_dedup.json")
+        for r in dd:
+            _csv(f"beyond/dedup_push_{r['push']}", 0.0,
+                 f"written={r['written_mb']}MB dedup={r['dedup_ratio']*100:.1f}%")
+        print(f"# beyond_paper done in {time.time()-t:.1f}s", file=sys.stderr)
 
     t = time.time()
     from benchmarks.delta_precopy import run_delta_bytes, run_precopy_sweep
-    db = run_delta_bytes(out_path="results/delta_bytes.json")
-    _csv("delta/bytes", 0.0,
-         f"delta={db['delta_written_bytes']}B "
-         f"({db['delta_fraction']*100:.1f}% of full) "
-         f"smaller={db['delta_strictly_smaller']}")
-    for r in run_precopy_sweep(repeats=2,
+    if not args.quick:  # real-JAX consumer: skipped in the smoke profile
+        db = run_delta_bytes(out_path="results/delta_bytes.json")
+        _csv("delta/bytes", 0.0,
+             f"delta={db['delta_written_bytes']}B "
+             f"({db['delta_fraction']*100:.1f}% of full) "
+             f"smaller={db['delta_strictly_smaller']}")
+    for r in run_precopy_sweep(repeats=1 if args.quick else 2,
                                out_path="results/delta_precopy.json"):
         _csv(f"delta/{r['profile']}@{r['rate']:g}r{r['max_rounds']}",
              r["downtime_mean"],
@@ -93,7 +117,8 @@ def main() -> int:
 
     t = time.time()
     from benchmarks.fleet_migration import run_fleet
-    for r in run_fleet(repeats=2, out_path="results/fleet_migration.json"):
+    for r in run_fleet(repeats=1 if args.quick else 2,
+                       out_path="results/fleet_migration.json"):
         _csv(f"fleet/{r['scenario']}", r["span_mean"],
              f"peak_conc={r['peak_concurrency']} "
              f"max_downtime={r['max_downtime_mean']}s "

@@ -14,6 +14,7 @@ from repro.cluster.cluster import Cluster
 from repro.core import (
     ClusterMigrationOrchestrator,
     HashConsumer,
+    MigrationPolicy,
     PodMigrationSpec,
 )
 
@@ -53,7 +54,7 @@ def main():
               dict(api.statefulsets.identities))
 
         orch = ClusterMigrationOrchestrator(
-            api, HashConsumer, manager_kwargs={"precopy": True})
+            api, HashConsumer, policy=MigrationPolicy(precopy=True))
         specs = [PodMigrationSpec(pod=sources[i], queue=f"orders-{i}",
                                   target_node="node2",
                                   identity=f"consumer-{i}")

@@ -120,6 +120,7 @@ class Pod:
     def resume(self):
         self.paused = False
         self.serving = True
+        self.wake()  # release a condition-stalled loop
 
     def stop(self):
         self.deleted = True
@@ -135,7 +136,12 @@ class Pod:
     def _run(self) -> Generator:
         while not self.deleted:
             if self.paused or not self.node.alive:
-                yield 0.05
+                # condition-based stall, not a busy-poll: a paused pod (e.g.
+                # the source of a long migration after the cutoff fired)
+                # contributes ZERO sim events until resume()/stop()/node
+                # recovery wakes it
+                self._wake = self.sim.condition(f"{self.name}:stall")
+                yield self._wake
                 continue
             msg = self.queue.try_get()
             if msg is None:
@@ -209,6 +215,16 @@ class APIServer:
             self.pods.pop(pod.name, None)
         node.pods.clear()
         self._log("node_killed", node=name)
+
+    def revive_node(self, name: str):
+        """Bring a node back (maintenance over / transient partition healed)
+        and wake any pod whose service loop stalled on the dead node."""
+        node = self.nodes[name]
+        node.alive = True
+        node.last_heartbeat = self.sim.now
+        for pod in list(node.pods.values()):
+            pod.wake()
+        self._log("node_revived", node=name)
 
     # -- pod lifecycle (generator sub-processes) --------------------------------
     def create_pod(self, name: str, node_name: str, worker,

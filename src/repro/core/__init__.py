@@ -6,11 +6,20 @@ from repro.core.consumer import StatefulConsumer, measure_replay_speedup  # noqa
 from repro.core.cutoff import (  # noqa: F401
     CutoffController,
     batched_cutoff_threshold,
+    choose_adaptive_strategy,
     cutoff_threshold,
     expected_catchup_time,
     replay_time_bound,
 )
 from repro.core.migration import MigrationManager, MigrationReport  # noqa: F401
+from repro.core.policy import MigrationEvent, MigrationPolicy  # noqa: F401
+from repro.core.strategy import (  # noqa: F401
+    MigrationContext,
+    MigrationStrategy,
+    available_strategies,
+    get_strategy,
+    register_strategy,
+)
 from repro.core.orchestrator import (  # noqa: F401
     ClusterMigrationOrchestrator,
     FleetReport,

@@ -59,6 +59,52 @@ def stable_for_live_migration(lam: float, mu: float, rho_max: float = 0.95) -> b
     return lam < rho_max * mu
 
 
+def transfer_time_estimate(fixed_s: float, state_bytes: float,
+                           bw_Bps: float) -> float:
+    """Expected single-shot transfer time: fixed control-plane costs plus
+    the wire time of one full state image."""
+    return fixed_s + state_bytes / max(bw_Bps, 1.0)
+
+
+def choose_adaptive_strategy(lam: float, mu: float, *, fixed_s: float,
+                             wire_s: float, t_replay_max: float,
+                             rho_max: float = 0.9):
+    """Decision rule behind the ``ms2m_adaptive`` strategy (pure, so it is
+    unit-testable without a cluster).  Returns ``(strategy_name, why)``
+    where ``why`` carries the telemetry the decision read.
+
+    The accumulation window of a live MS2M migration is at least the
+    transfer time T_xfer = fixed_s + wire_s, so the backlog at restore is
+    ~λ·T_xfer and catch-up drains it at (μ - λ):
+
+      * λ >= ρ_max·μ             — live sync cannot converge (the paper's
+                                   high-λ failure mode): bound it, cutoff.
+      * wire_s > fixed_s         — transfer is byte-dominated: iterative
+                                   pre-copy both shrinks the final pull and
+                                   bounds replay to one round, pre-copy.
+      * catch-up > T_replay_max  — stable but slow: enforce the Eq. 5
+                                   bound, cutoff.
+      * otherwise                — plain live sync is already cheap.
+    """
+    t_xfer = fixed_s + wire_s
+    backlog = lam * t_xfer
+    catchup_s = expected_catchup_time(lam, mu, backlog)
+    why = {
+        "lam": round(lam, 4), "mu": round(mu, 4),
+        "t_transfer": round(t_xfer, 3), "wire_s": round(wire_s, 3),
+        "fixed_s": round(fixed_s, 3),
+        "expected_catchup_s": (None if math.isinf(catchup_s)
+                               else round(catchup_s, 3)),
+    }
+    if not stable_for_live_migration(lam, mu, rho_max):
+        return "ms2m_cutoff", dict(why, reason="unstable_for_live_sync")
+    if wire_s > fixed_s:
+        return "ms2m_precopy", dict(why, reason="byte_dominated_transfer")
+    if catchup_s > t_replay_max:
+        return "ms2m_cutoff", dict(why, reason="catchup_exceeds_replay_bound")
+    return "ms2m_individual", dict(why, reason="stable_and_cheap")
+
+
 @dataclasses.dataclass
 class RateEstimator:
     """EWMA arrival/service rate estimator (events per second)."""

@@ -1,39 +1,17 @@
-"""MS2M migration strategies (paper §III, Figs. 1-4) as cluster processes.
+"""The Migration Manager: a thin orchestration core over the strategy
+registry (see ``repro.core.strategy`` / ``repro.core.strategies``).
 
-Five strategies, all driven by the MigrationManager through the APIServer:
+The manager resolves a strategy name through the registry, builds a
+``MigrationContext`` (control-plane handles + ``MigrationPolicy`` + the
+``MigrationReport`` under construction) and runs the strategy's phase
+pipeline as a sim process.  It knows nothing about individual schemes:
+adding a scenario means registering a ``MigrationStrategy`` class, not
+editing this file.
 
-  stop_and_copy      — UMS-style baseline: pause -> checkpoint -> image ->
-                       push -> pull -> restore -> switch.  Downtime == the
-                       whole migration (paper Fig. 5).
-  ms2m_individual    — Fig. 2: secondary queue attached, source keeps
-                       serving; target restores from the registry image and
-                       replays the mirrored log until *synchronized*, then a
-                       short cutover.  Downtime == cutover only.
-  ms2m_cutoff        — Fig. 3: same, plus the Threshold-Based Cutoff
-                       Mechanism: when T_accum exceeds Eq. 5's T_cutoff, the
-                       source is stopped and the remaining (bounded) log is
-                       replayed; bounded replay <= T_replay_max by
-                       construction.
-  ms2m_statefulset   — Fig. 4: sticky identity forces stop-before-create:
-                       checkpoint+push live, then stop source, release
-                       identity, create target, restore, replay to the
-                       *cutoff message id* (source's last processed), switch.
-  ms2m_precopy       — beyond-paper (MOSE/SHADOW-style iterative pre-copy):
-                       full checkpoint+push once, then repeated
-                       checkpoint→delta-push rounds while the source keeps
-                       serving; each delta carries only the chunks dirtied
-                       since the previous round and is prefetched onto the
-                       target node, so the final restore is nearly free and
-                       the replay log is bounded by ONE round's traffic
-                       instead of the whole transfer.  The loop stops when
-                       the inter-round dirty set converges.  The same loop
-                       is available as an opt-in (``precopy=True``) for
-                       ms2m_individual / ms2m_cutoff / ms2m_statefulset.
-
-Replay correctness: message ids are totally ordered per queue; the target
-skips ids <= the checkpoint marker and replays the rest through the same
-jitted fold the source used => bit-exact state (verified by tests and by
-every benchmark run via ``verify_against_reference``).
+Configuration is one declarative ``MigrationPolicy`` value; the legacy
+constructor knobs (``precopy=``, ``batched_replay=``, ...) are still
+accepted and folded into a policy, so pre-registry call sites keep
+working unchanged.
 
 Migrations subscribe to pod ``on_processed`` events via removable
 listeners and deregister them on completion, so repeated migrations of
@@ -42,38 +20,21 @@ stale sync checks against deleted pods.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, Dict, Generator, List, Optional
+from typing import Any, Callable, Generator, List, Optional
 
-from repro.cluster.cluster import APIServer, Pod, TimingConstants
-from repro.cluster.sim import Condition, Sim
+from repro.cluster.cluster import APIServer, Pod
+from repro.cluster.sim import Condition
 from repro.core.cutoff import CutoffController
-
-
-@dataclasses.dataclass
-class MigrationReport:
-    strategy: str
-    t_start: float
-    t_end: float = 0.0
-    downtime: float = 0.0
-    phases: Dict[str, float] = dataclasses.field(default_factory=dict)
-    checkpoint_marker: int = -1
-    cutoff_id: Optional[int] = None
-    cutoff_fired: bool = False
-    replayed_messages: int = 0
-    image_id: str = ""
-    image_written_bytes: int = 0
-    image_deduped_bytes: int = 0
-    state_verified: Optional[bool] = None
-    # pre-copy telemetry: per-round wire bytes / dirty-message counts
-    # (index 0 = the initial full push)
-    precopy_rounds: int = 0
-    precopy_round_bytes: List[int] = dataclasses.field(default_factory=list)
-    precopy_round_dirty: List[int] = dataclasses.field(default_factory=list)
-
-    @property
-    def migration_time(self) -> float:
-        return self.t_end - self.t_start
+from repro.core.policy import MigrationEvent, MigrationPolicy, MigrationReport  # noqa: F401  (re-export)
+from repro.core.strategy import (
+    MigrationContext,
+    drain_condition,
+    get_strategy,
+    listen,
+    sync_condition,
+    unlisten_all,
+)
+from repro.core import strategies as _builtin_strategies  # noqa: F401  (registers the built-ins)
 
 
 class MigrationManager:
@@ -83,110 +44,101 @@ class MigrationManager:
     def __init__(self, api: APIServer, make_worker: Callable[[], Any],
                  primary_queue: str,
                  cutoff: Optional[CutoffController] = None,
-                 batched_replay: bool = False,
-                 replay_speedup: float = 1.0,
-                 precopy: bool = False,
-                 precopy_max_rounds: int = 5,
-                 precopy_converge_ratio: float = 0.9,
-                 precopy_min_dirty: int = 0):
+                 policy: Optional[MigrationPolicy] = None,
+                 # legacy knobs, folded into the policy (None = unset):
+                 batched_replay: Optional[bool] = None,
+                 replay_speedup: Optional[float] = None,
+                 precopy: Optional[bool] = None,
+                 precopy_max_rounds: Optional[int] = None,
+                 precopy_converge_ratio: Optional[float] = None,
+                 precopy_min_dirty: Optional[int] = None):
         self.api = api
         self.sim = api.sim
         self.broker = api.broker
         self.make_worker = make_worker
         self.primary_queue = primary_queue
         self.cutoff = cutoff
-        self.batched_replay = batched_replay
-        self.replay_speedup = max(1.0, replay_speedup)
-        # pre-copy opt-in for the ms2m_* strategies (ms2m_precopy always on):
-        # delta rounds stop when the dirty set shrinks by less than
-        # (1 - converge_ratio) or reaches min_dirty messages
-        self.precopy = precopy
-        self.precopy_max_rounds = precopy_max_rounds
-        self.precopy_converge_ratio = precopy_converge_ratio
-        self.precopy_min_dirty = precopy_min_dirty
+        self.policy = MigrationPolicy.resolve(
+            policy,
+            batched_replay=batched_replay,
+            replay_speedup=replay_speedup,
+            precopy=precopy,
+            precopy_max_rounds=precopy_max_rounds,
+            precopy_converge_ratio=precopy_converge_ratio,
+            precopy_min_dirty=precopy_min_dirty,
+        )
         self._n = 0
 
+    # -- legacy attribute views (pre-policy call sites read these) -----------
+    @property
+    def batched_replay(self) -> bool:
+        return self.policy.batched_replay
+
+    @property
+    def replay_speedup(self) -> float:
+        return self.policy.replay_speedup
+
+    @property
+    def precopy(self) -> bool:
+        return self.policy.precopy
+
+    @property
+    def precopy_max_rounds(self) -> int:
+        return self.policy.precopy_max_rounds
+
     # ---------------------------------------------------------------------
-    def migrate(self, strategy: str, source: Pod, target_node: str,
-                statefulset_identity: Optional[str] = None) -> Condition:
-        if statefulset_identity is not None and strategy != "ms2m_statefulset":
+    def migration(self, strategy: str, source: Pod, target_node: str,
+                  statefulset_identity: Optional[str] = None,
+                  policy: Optional[MigrationPolicy] = None) -> Generator:
+        """Validate and build one migration as a raw sim generator.
+
+        Callers that need failure isolation (the fleet orchestrator) drive
+        this inside their own guarded process; everyone else uses
+        ``migrate``.  Validation errors raise here, synchronously.
+        """
+        cls = get_strategy(strategy)
+        if statefulset_identity is not None and not cls.handles_identity:
             # every other strategy deletes the source without releasing the
             # identity, which would leave it claimed by a dead pod forever
             raise ValueError(
                 f"strategy {strategy!r} cannot hand off StatefulSet identity "
                 f"{statefulset_identity!r}; use 'ms2m_statefulset'")
-        gen = {
-            "stop_and_copy": self._stop_and_copy,
-            "ms2m_individual": self._ms2m_individual,
-            "ms2m_cutoff": self._ms2m_cutoff,
-            "ms2m_statefulset": self._ms2m_statefulset,
-            "ms2m_precopy": self._ms2m_precopy,
-        }[strategy]
         # capture the migration number NOW: the generator body runs later,
         # and two concurrent migrations on the same queue would otherwise
         # both read the post-increment _n and attach the same secondary
         self._n += 1
-        n = self._n
+        ctx = MigrationContext(self, source, target_node,
+                               statefulset_identity,
+                               policy or self.policy, strategy, self._n)
+        return cls().run(ctx)
+
+    def migrate(self, strategy: str, source: Pod, target_node: str,
+                statefulset_identity: Optional[str] = None,
+                policy: Optional[MigrationPolicy] = None) -> Condition:
+        gen = self.migration(strategy, source, target_node,
+                             statefulset_identity=statefulset_identity,
+                             policy=policy)
         return self.sim.process(
-            gen(source, target_node, statefulset_identity, n=n),
-            name=f"migration:{strategy}:{self.primary_queue}:{n}",
-        )
+            gen, name=f"migration:{strategy}:{self.primary_queue}:{self._n}")
 
-    # -- helpers -------------------------------------------------------------
-    def _phase(self, report: MigrationReport, name: str, t0: float):
-        report.phases[name] = report.phases.get(name, 0.0) + (self.sim.now - t0)
-
+    # -- condition helpers (kept as methods: tests and external tooling use
+    # them against a bare manager; strategies reach them via the context) ----
     def _listen(self, pod: Pod, fn: Callable, subs: List) -> None:
-        """Subscribe ``fn`` to the pod's processed events, recording the
-        subscription so the migration can deregister it on completion."""
-        pod.add_on_processed(fn)
-        subs.append((pod, fn))
+        listen(pod, fn, subs)
 
     @staticmethod
     def _unlisten_all(subs: List) -> None:
-        for pod, fn in subs:
-            pod.remove_on_processed(fn)
-        subs.clear()
+        unlisten_all(subs)
 
     def _sync_condition(self, target_pod: Pod, source_pod: Pod,
                         secondary, subs: List) -> Condition:
-        """Triggered when target has replayed everything the source has
-        processed and the mirror buffer is empty."""
-        cond = self.sim.condition("synced")
-
-        def check(*_):
-            if (secondary.depth() == 0
-                    and target_pod.worker.last_msg_id >= source_pod.worker.last_msg_id):
-                cond.trigger()
-
-        self._listen(target_pod, check, subs)
-        self._listen(source_pod, check, subs)
-        check()
-        return cond
+        return sync_condition(self.sim, target_pod, source_pod, secondary,
+                              subs)
 
     def _drain_condition(self, target_pod: Pod, up_to_id: int,
                          secondary, subs: List) -> Condition:
-        """Triggered when target has replayed ids <= up_to_id.
-
-        The empty-mirror short-circuit exists for ids the mirror can never
-        deliver (messages consumed from the primary before the secondary
-        was attached).  It may only fire when no more mirrored traffic can
-        arrive for the target: the mirror is empty AND nothing is in
-        flight (mid-service) at the target — a momentarily-empty mirror
-        while the last mirrored message is still being folded must NOT
-        trigger a premature cutover (that dropped the in-flight message's
-        state update from the downtime accounting and switched routes
-        before the target was caught up)."""
-        cond = self.sim.condition("drained")
-
-        def check(*_):
-            if target_pod.worker.last_msg_id >= up_to_id or (
-                    secondary.depth() == 0 and not target_pod.busy):
-                cond.trigger()
-
-        self._listen(target_pod, check, subs)
-        check()
-        return cond
+        return drain_condition(self.sim, target_pod, up_to_id, secondary,
+                               subs)
 
     def _switch_to_primary(self, target_pod: Pod, secondary_name: str):
         self.broker.detach_secondary(self.primary_queue, secondary_name)
@@ -194,313 +146,5 @@ class MigrationManager:
         target_pod.wake()  # unblock if it was waiting on the secondary
 
     def _detach_if_mirrored(self, secondary_name: str):
-        """Error-path cleanup: a migration that dies before cutover must not
-        leave its mirror attached (it would double-buffer every future
-        publish into a queue nothing drains)."""
         if self.broker.is_mirrored(self.primary_queue, secondary_name):
             self.broker.detach_secondary(self.primary_queue, secondary_name)
-
-    def _transfer(self, source: Pod, target_node: str, rep: MigrationReport,
-                  use_precopy: bool, pre_tag: str, full_tag: str) -> Generator:
-        """Checkpoint-transfer phase, pre-copy or single-shot."""
-        if use_precopy:
-            push, marker = yield from self._precopy_transfer(
-                source, target_node, rep, pre_tag)
-            rep.checkpoint_marker = marker
-            rep.image_id = push.image_id
-        else:
-            _, push = yield from self._full_transfer(source, rep, full_tag)
-        return push
-
-    def _full_transfer(self, source: Pod, rep: MigrationReport,
-                       tag: str) -> Generator:
-        """Checkpoint + full image push, with phase/report accounting.
-        Returns (checkpoint dict, PushReport)."""
-        t0 = self.sim.now
-        ckpt = yield from self.api.checkpoint_pod(source)  # source serving
-        rep.checkpoint_marker = ckpt["last_msg_id"]
-        self._phase(rep, "checkpoint", t0)
-
-        t0 = self.sim.now
-        push = yield from self.api.build_and_push_image(ckpt, tag)
-        rep.image_id = push.image_id
-        rep.image_written_bytes = push.written_bytes
-        rep.image_deduped_bytes = push.deduped_bytes
-        self._phase(rep, "image_build_push", t0)
-        return ckpt, push
-
-    # -- iterative pre-copy (delta checkpoint rounds) -------------------------
-    def _precopy_transfer(self, source: Pod, target_node: str,
-                          rep: MigrationReport, tag: str) -> Generator:
-        """One full checkpoint+push, then checkpoint→delta-push rounds while
-        the source keeps serving.  Every image is prefetched onto the target
-        node, so the final restore pulls ~nothing; the loop stops when the
-        inter-round dirty set (messages processed between two consecutive
-        checkpoints) converges.  Returns (final PushReport, final marker):
-        the replay log left for the target is bounded by the LAST round's
-        traffic instead of the whole transfer."""
-        base = source.worker.last_msg_id  # lineage may predate this migration
-        ckpt, push = yield from self._full_transfer(source, rep, f"{tag}-r0")
-        t0 = self.sim.now
-        yield from self.api.prefetch_image(target_node, push.image_id)
-        self._phase(rep, "precopy_prefetch", t0)
-        rep.precopy_round_bytes.append(push.delta_bytes)
-        rep.precopy_round_dirty.append(ckpt["last_msg_id"] - base)
-        marker = ckpt["last_msg_id"]
-
-        prev_dirty: Optional[int] = None
-        while rep.precopy_rounds < self.precopy_max_rounds:
-            # phases stay comparable across strategies: dumps are always
-            # booked as "checkpoint", only delta build/push/prefetch as
-            # the precopy-specific phases
-            t0 = self.sim.now
-            ckpt = yield from self.api.checkpoint_pod(source)
-            self._phase(rep, "checkpoint", t0)
-            dirty = ckpt["last_msg_id"] - marker
-            if dirty <= self.precopy_min_dirty:
-                # nothing dirtied since the last round (e.g. source already
-                # paused by the cutoff): the previous image already holds
-                # this exact state — don't pay for a bit-identical push
-                break
-            t0 = self.sim.now
-            delta = yield from self.api.push_delta_image(
-                ckpt, f"{tag}-r{rep.precopy_rounds + 1}", push.image_id)
-            yield from self.api.prefetch_image(target_node, delta.image_id)
-            self._phase(rep, "precopy_delta", t0)
-            push = delta
-            marker = ckpt["last_msg_id"]
-            rep.precopy_rounds += 1
-            rep.precopy_round_bytes.append(delta.delta_bytes)
-            rep.precopy_round_dirty.append(dirty)
-            rep.image_written_bytes += delta.written_bytes
-            rep.image_deduped_bytes += delta.deduped_bytes
-            if (prev_dirty is not None
-                    and dirty >= prev_dirty * self.precopy_converge_ratio):
-                break  # dirty set stopped shrinking: steady state reached
-            prev_dirty = dirty
-        return push, marker
-
-    # ---------------------------------------------------------------------
-    # Strategy 0: stop-and-copy (baseline; paper Fig. 5)
-    # ---------------------------------------------------------------------
-    def _stop_and_copy(self, source: Pod, target_node: str,
-                       _identity=None, *, n: Optional[int] = None) -> Generator:
-        n = self._n if n is None else n
-        t = self.api.timings
-        rep = MigrationReport("stop_and_copy", self.sim.now)
-        down0 = self.sim.now
-        source.pause()  # downtime starts immediately
-
-        _, push = yield from self._full_transfer(
-            source, rep, f"{self.primary_queue}-sac{n}")
-
-        t0 = self.sim.now
-        worker = self.make_worker()
-        target = yield from self.api.create_pod(
-            f"{source.name}-target-{n}", target_node, worker,
-            self.broker.queues[self.primary_queue],
-            processing_ms=source.processing_ms)
-        yield from self.api.pull_and_restore(push.image_id, worker,
-                                             node_name=target_node)
-        self._phase(rep, "service_restoration", t0)
-
-        t0 = self.sim.now
-        yield from self.api.delete_pod(source.name)
-        yield t.route_switch_s
-        target.start()
-        self._phase(rep, "cutover", t0)
-
-        rep.downtime = self.sim.now - down0
-        rep.t_end = self.sim.now
-        return rep, target
-
-    # ---------------------------------------------------------------------
-    # Strategy 1: MS2M for individual pods (paper Fig. 2)
-    # ---------------------------------------------------------------------
-    def _ms2m_individual(self, source: Pod, target_node: str,
-                         _identity=None, *, deadline: Optional[float] = None,
-                         precopy: Optional[bool] = None,
-                         strategy_name: Optional[str] = None,
-                         n: Optional[int] = None) -> Generator:
-        n = self._n if n is None else n
-        t = self.api.timings
-        use_precopy = self.precopy if precopy is None else precopy
-        name = strategy_name or (
-            "ms2m_cutoff" if deadline is not None else "ms2m_individual")
-        rep = MigrationReport(name, self.sim.now)
-        sec = self.broker.attach_secondary(self.primary_queue,
-                                           f"{self.primary_queue}.sec{n}")
-        accum_started = self.sim.now
-        subs: List = []  # processed-event listeners, removed on completion
-
-        # Threshold-Based Cutoff (Fig. 3): when T_accum hits Eq. 5's bound,
-        # the SOURCE STOPS — even mid-transfer — capping the replay log at
-        # N <= λ·T_cutoff so that T_replay <= T_replay_max by construction.
-        cutoff_state: dict = {"fired": False, "pause_time": None, "id": None}
-        fired_cond = self.sim.condition("cutoff-fired")
-        if deadline is not None:
-            def _fire():
-                if (not cutoff_state["fired"] and not source.paused
-                        and not source.deleted):
-                    cutoff_state["fired"] = True
-                    cutoff_state["pause_time"] = self.sim.now
-                    source.pause()
-                    cutoff_state["id"] = source.worker.last_msg_id
-                    fired_cond.trigger()
-
-            self.sim.call_at(accum_started + deadline, _fire)
-
-        try:
-            push = yield from self._transfer(
-                source, target_node, rep, use_precopy,
-                f"{self.primary_queue}-pre{n}",
-                f"{self.primary_queue}-ms2m{n}")
-
-            t0 = self.sim.now
-            worker = self.make_worker()
-            worker.skip_until = rep.checkpoint_marker
-            replay_ms = source.processing_ms / self.replay_speedup
-            target = yield from self.api.create_pod(
-                f"{source.name}-target-{n}", target_node, worker, sec,
-                processing_ms=replay_ms)
-            yield from self.api.pull_and_restore(push.image_id, worker,
-                                                 node_name=target_node)
-            self._phase(rep, "service_restoration", t0)
-
-            # -- catch-up: target replays the mirror, source keeps serving --
-            t0 = self.sim.now
-            base_processed = worker.n_processed
-            target.start()
-            if cutoff_state["fired"]:
-                # source already stopped (deadline expired mid-transfer):
-                # bounded replay to the frozen cutoff id
-                yield self._drain_condition(target, cutoff_state["id"], sec,
-                                            subs)
-            else:
-                synced = self._sync_condition(target, source, sec, subs)
-                yield self.sim.any_of(synced, fired_cond) \
-                    if deadline is not None else synced
-                if cutoff_state["fired"] and not synced.triggered:
-                    # fired mid-catch-up: bounded drain to the frozen id
-                    yield self._drain_condition(target, cutoff_state["id"],
-                                                sec, subs)
-            self._phase(rep, "message_replay", t0)
-
-            # -- cutover --------------------------------------------------------
-            t0 = self.sim.now
-            if cutoff_state["fired"]:
-                rep.cutoff_fired = True
-                rep.cutoff_id = cutoff_state["id"]
-                down0 = cutoff_state["pause_time"]  # downtime began at pause
-            else:
-                down0 = self.sim.now
-                source.pause()
-            yield t.cutover_coord_s
-            # drain in-flight mirrored messages up to the source's final state
-            yield self._drain_condition(target, source.worker.last_msg_id,
-                                        sec, subs)
-            self._switch_to_primary(target, sec.name)
-            target.processing_ms = source.processing_ms  # back to service rate
-            yield t.route_switch_s
-            rep.downtime = self.sim.now - down0
-            self._phase(rep, "cutover", t0)
-
-            t0 = self.sim.now
-            yield from self.api.delete_pod(source.name)
-            self._phase(rep, "source_teardown", t0)
-
-            rep.replayed_messages = worker.n_processed - base_processed
-            rep.t_end = self.sim.now
-            return rep, target
-        finally:
-            # deregister sync/drain listeners: repeated migrations of the
-            # same lineage must not keep firing stale checks (callback leak)
-            self._unlisten_all(subs)
-            self._detach_if_mirrored(sec.name)  # no-op after cutover
-
-    # ---------------------------------------------------------------------
-    # Strategy 2: MS2M + Threshold-Based Cutoff (paper Fig. 3, Eq. 5)
-    # ---------------------------------------------------------------------
-    def _ms2m_cutoff(self, source: Pod, target_node: str,
-                     _identity=None, *, n: Optional[int] = None) -> Generator:
-        assert self.cutoff is not None, "ms2m_cutoff needs a CutoffController"
-        deadline = self.cutoff.threshold()
-        result = yield from self._ms2m_individual(
-            source, target_node, deadline=deadline, n=n)
-        return result
-
-    # ---------------------------------------------------------------------
-    # Strategy 4: MS2M + iterative delta pre-copy (beyond paper)
-    # ---------------------------------------------------------------------
-    def _ms2m_precopy(self, source: Pod, target_node: str,
-                      _identity=None, *, n: Optional[int] = None) -> Generator:
-        result = yield from self._ms2m_individual(
-            source, target_node, precopy=True, strategy_name="ms2m_precopy",
-            n=n)
-        return result
-
-    # ---------------------------------------------------------------------
-    # Strategy 3: MS2M for StatefulSet pods (paper Fig. 4)
-    # ---------------------------------------------------------------------
-    def _ms2m_statefulset(self, source: Pod, target_node: str,
-                          identity: Optional[str] = None, *,
-                          n: Optional[int] = None) -> Generator:
-        n = self._n if n is None else n
-        t = self.api.timings
-        identity = identity or f"sts-{source.name}"
-        rep = MigrationReport("ms2m_statefulset", self.sim.now)
-        sec = self.broker.attach_secondary(self.primary_queue,
-                                           f"{self.primary_queue}.sec{n}")
-        subs: List = []
-
-        try:
-            # with precopy, BOTH stop-phase costs of Fig. 4 shrink: the
-            # final marker is late (bounded replay) and the target node's
-            # layer cache is warm (near-zero pull)
-            push = yield from self._transfer(
-                source, target_node, rep, self.precopy,
-                f"{self.primary_queue}-sts-pre{n}",
-                f"{self.primary_queue}-sts{n}")
-
-            # -- stop source after the checkpoint-transfer phase (Fig. 4) ----
-            down0 = self.sim.now
-            source.pause()
-            rep.cutoff_id = source.worker.last_msg_id  # the cutoff message id
-
-            t0 = self.sim.now
-            yield from self.api.delete_pod(source.name,
-                                           statefulset_identity=identity)
-            self._phase(rep, "identity_release", t0)
-
-            t0 = self.sim.now
-            worker = self.make_worker()
-            worker.skip_until = rep.checkpoint_marker
-            replay_ms = source.processing_ms / self.replay_speedup
-            target = yield from self.api.create_pod(
-                f"{source.name}-target-{n}", target_node, worker, sec,
-                statefulset_identity=identity, processing_ms=replay_ms)
-            yield from self.api.pull_and_restore(push.image_id, worker,
-                                                 node_name=target_node)
-            self._phase(rep, "service_restoration", t0)
-
-            # -- replay up to the cutoff message id ---------------------------
-            t0 = self.sim.now
-            base_processed = worker.n_processed
-            target.start()
-            drained = self._drain_condition(target, rep.cutoff_id, sec, subs)
-            yield drained
-            self._phase(rep, "message_replay", t0)
-
-            t0 = self.sim.now
-            self._switch_to_primary(target, sec.name)
-            target.processing_ms = source.processing_ms
-            yield t.route_switch_s
-            rep.downtime = self.sim.now - down0
-            self._phase(rep, "cutover", t0)
-
-            rep.replayed_messages = worker.n_processed - base_processed
-            rep.t_end = self.sim.now
-            return rep, target
-        finally:
-            self._unlisten_all(subs)
-            self._detach_if_mirrored(sec.name)  # no-op after cutover

@@ -2,7 +2,7 @@
 migrates one pod at a time; real StatefulSets migrate many replicas).
 
 The ``ClusterMigrationOrchestrator`` drives N migrations through the same
-MigrationManager strategies, three ways:
+strategy registry the MigrationManager uses, three ways:
 
   * ``migrate_fleet``        — parallel individual-pod migrations with a
                                configurable concurrency limit (a semaphore
@@ -16,10 +16,15 @@ MigrationManager strategies, three ways:
                                StatefulSet identities and spreading targets
                                over the remaining alive nodes.
 
-Per-pod ``MigrationReport``s are aggregated into a ``FleetReport``; the
-per-queue MigrationManagers are cached so repeated migrations of the same
-lineage reuse one manager (which is exactly the scenario that used to leak
-``on_processed`` callbacks — see migration.py).
+Every migration runs inside a guard process, so one failing spec (e.g. a
+target node that died mid-fleet) is recorded in ``FleetReport.failures``
+instead of aborting the whole fleet.  Per-pod ``MigrationReport``s are
+aggregated into a ``FleetReport``; the per-queue MigrationManagers are
+cached so repeated migrations of the same lineage reuse one manager (which
+is exactly the scenario that used to leak ``on_processed`` callbacks — see
+migration.py).  Migration behaviour is configured with one declarative
+``MigrationPolicy`` (fleet-wide on the orchestrator, overridable per spec);
+the legacy ``manager_kwargs`` dict is still accepted and folded in.
 
 ``run_fleet_experiment`` is the workload harness: N queues x N Poisson
 producers x N consumer pods, orchestrated migration, then per-pod
@@ -38,6 +43,8 @@ from repro.cluster.cluster import APIServer, Cluster, Pod, TimingConstants
 from repro.cluster.sim import Condition
 from repro.core.cutoff import CutoffController
 from repro.core.migration import MigrationManager, MigrationReport
+from repro.core.policy import MigrationPolicy
+from repro.core.strategy import get_strategy
 
 
 @dataclasses.dataclass
@@ -48,6 +55,7 @@ class PodMigrationSpec:
     target_node: str
     strategy: str = "ms2m_individual"
     identity: Optional[str] = None   # StatefulSet identity to hand off
+    policy: Optional[MigrationPolicy] = None  # overrides the fleet policy
 
 
 @dataclasses.dataclass
@@ -58,10 +66,16 @@ class FleetReport:
     reports: List[MigrationReport] = dataclasses.field(default_factory=list)
     targets: List[Pod] = dataclasses.field(default_factory=list)
     peak_concurrency: int = 0
+    # specs whose migration raised (error isolated, fleet kept going)
+    failures: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
 
     @property
     def n_migrated(self) -> int:
         return len(self.reports)
+
+    @property
+    def n_failed(self) -> int:
+        return len(self.failures)
 
     @property
     def span(self) -> float:
@@ -86,15 +100,34 @@ class FleetReport:
             return None
         return all(r.state_verified for r in self.reports)
 
+    def downtime_by_strategy(self) -> Dict[str, Dict[str, float]]:
+        """Per-strategy downtime breakdown (a fleet can mix strategies —
+        e.g. a drain moving sticky replicas via ms2m_statefulset)."""
+        out: Dict[str, Dict[str, float]] = {}
+        for r in self.reports:
+            s = out.setdefault(r.strategy,
+                               {"n": 0, "max": 0.0, "total": 0.0})
+            s["n"] += 1
+            s["max"] = max(s["max"], r.downtime)
+            s["total"] += r.downtime
+        for s in out.values():
+            s["mean"] = round(s["total"] / s["n"], 3)
+            s["max"] = round(s["max"], 3)
+            s["total"] = round(s["total"], 3)
+        return out
+
     def row(self) -> Dict[str, Any]:
         return {
             "n_migrated": self.n_migrated,
+            "n_failed": self.n_failed,
             "span": round(self.span, 3),
             "peak_concurrency": self.peak_concurrency,
             "max_downtime": round(self.max_downtime, 3),
             "total_downtime": round(self.total_downtime, 3),
             "all_verified": self.all_verified,
             "strategies": sorted({r.strategy for r in self.reports}),
+            "downtime_by_strategy": self.downtime_by_strategy(),
+            "failures": [dict(f) for f in self.failures],
         }
 
 
@@ -104,13 +137,16 @@ class ClusterMigrationOrchestrator:
     def __init__(self, api: APIServer, make_worker: Callable[[], Any], *,
                  max_concurrent: int = 4,
                  cutoff_factory: Optional[Callable[[], CutoffController]] = None,
+                 policy: Optional[MigrationPolicy] = None,
                  manager_kwargs: Optional[Dict[str, Any]] = None):
         self.api = api
         self.sim = api.sim
         self.make_worker = make_worker
         self.max_concurrent = max_concurrent
         self.cutoff_factory = cutoff_factory
-        self.manager_kwargs = dict(manager_kwargs or {})
+        # legacy shim: manager_kwargs={"precopy": True, ...} folds into the
+        # declarative policy
+        self.policy = MigrationPolicy.resolve(policy, **(manager_kwargs or {}))
         self._managers: Dict[str, MigrationManager] = {}
 
     # -- managers (one per primary queue, cached across migrations) ----------
@@ -119,7 +155,7 @@ class ClusterMigrationOrchestrator:
             cutoff = self.cutoff_factory() if self.cutoff_factory else None
             self._managers[queue] = MigrationManager(
                 self.api, self.make_worker, queue, cutoff=cutoff,
-                **self.manager_kwargs)
+                policy=self.policy)
         return self._managers[queue]
 
     def identity_of(self, pod: Pod) -> Optional[str]:
@@ -139,6 +175,20 @@ class ClusterMigrationOrchestrator:
         return self.sim.process(self._drive(list(specs), limit, fleet),
                                 name=f"fleet:{len(specs)}x{limit}")
 
+    def _guard(self, spec: PodMigrationSpec) -> Generator:
+        """One migration with failure isolation: any exception — spec
+        validation, a dead target node mid-fleet, a strategy bug — fails
+        this spec only, never the fleet (the strategy's own cleanup still
+        runs via its finally block)."""
+        try:
+            mgr = self.manager_for(spec.queue)
+            report, target = yield from mgr.migration(
+                spec.strategy, spec.pod, spec.target_node,
+                statefulset_identity=spec.identity, policy=spec.policy)
+            return "ok", report, target
+        except Exception as exc:  # noqa: BLE001 — isolate any spec failure
+            return "failed", spec, exc
+
     def _drive(self, specs: List[PodMigrationSpec], limit: int,
                fleet: FleetReport) -> Generator:
         pending = deque(specs)
@@ -146,18 +196,29 @@ class ClusterMigrationOrchestrator:
         while pending or active:
             while pending and len(active) < limit:
                 spec = pending.popleft()
-                mgr = self.manager_for(spec.queue)
-                cond = mgr.migrate(spec.strategy, spec.pod, spec.target_node,
-                                   statefulset_identity=spec.identity)
+                cond = self.sim.process(
+                    self._guard(spec),
+                    name=f"migration:{spec.strategy}:{spec.queue}")
                 active[cond] = spec
                 fleet.peak_concurrency = max(fleet.peak_concurrency,
                                              len(active))
             yield self.sim.any_of(*active.keys())
             for cond in [c for c in active if c.triggered]:
                 active.pop(cond)
-                report, target = cond.value
-                fleet.reports.append(report)
-                fleet.targets.append(target)
+                status, *payload = cond.value
+                if status == "ok":
+                    report, target = payload
+                    fleet.reports.append(report)
+                    fleet.targets.append(target)
+                else:
+                    spec, exc = payload
+                    fleet.failures.append({
+                        "pod": spec.pod.name if spec.pod else None,
+                        "queue": spec.queue,
+                        "target_node": spec.target_node,
+                        "strategy": spec.strategy,
+                        "error": f"{type(exc).__name__}: {exc}",
+                    })
         fleet.t_end = self.sim.now
         return fleet
 
@@ -222,6 +283,7 @@ def run_fleet_experiment(
     timings: Optional[TimingConstants] = None,
     worker_factory: Optional[Callable] = None,
     chunk_bytes: Optional[int] = None,
+    policy: Optional[MigrationPolicy] = None,
     manager_kwargs: Optional[Dict[str, Any]] = None,
     t_replay_max: float = 45.0,
 ) -> FleetReport:
@@ -277,14 +339,18 @@ def run_fleet_experiment(
     assert len(sources) == n_pods
     sources.sort(key=lambda p: int(p.name.rsplit("-", 1)[-1]))
 
+    # strategies declare their control-plane needs via the registry — any
+    # scheme that wants the Eq. 5 controller (cutoff, adaptive, custom
+    # registrations) gets one, with no per-name special cases here
     cutoff_factory = None
-    if strategy == "ms2m_cutoff":
+    if get_strategy(strategy).wants_cutoff:
         cutoff_factory = lambda: CutoffController(  # noqa: E731
             t_replay_max=t_replay_max, mu_fallback=mu,
             lam_fallback=message_rate)
     orch = ClusterMigrationOrchestrator(
         api, make_worker, max_concurrent=max_concurrent,
-        cutoff_factory=cutoff_factory, manager_kwargs=manager_kwargs)
+        cutoff_factory=cutoff_factory, policy=policy,
+        manager_kwargs=manager_kwargs)
 
     if mode == "drain":
         done = orch.drain_node("node0", strategy=strategy,
@@ -300,6 +366,7 @@ def run_fleet_experiment(
 
     sim.run(stop_when=done)
     fleet: FleetReport = done.value
+    assert not fleet.failures, f"fleet migration failed: {fleet.failures}"
 
     # settle, stop traffic, let targets drain their queues
     sim.run(until=sim.now + settle_time)

@@ -1,0 +1,491 @@
+"""Pluggable migration strategies: registry, base class and the
+composable phase primitives strategies are built from.
+
+A strategy is a registered class::
+
+    @register_strategy("my_scheme")
+    class MyScheme(MigrationStrategy):
+        def run(self, ctx):            # a sim generator
+            sec = ctx.attach_secondary()
+            push = yield from ctx.transfer(use_precopy=False,
+                                           pre_tag="t-pre", full_tag="t")
+            ...
+
+``MigrationManager.migrate("my_scheme", ...)`` resolves the name through
+the registry — the manager core knows nothing about individual schemes, so
+new scenarios are added without touching it.
+
+The building blocks live here too:
+
+  * transfer engines — ``SingleShotTransfer`` (one checkpoint + full image
+    push) and ``IterativePrecopyTransfer`` (checkpoint -> delta-push rounds
+    with target-node prefetch until the dirty set converges);
+  * catch-up disciplines — ``LiveSyncCatchup`` (target chases the live
+    source), ``ThresholdCutoffCatchup`` (live sync under the Eq. 5
+    deadline, draining to a frozen id once it fires) and
+    ``StopThenReplayCatchup`` (source already stopped; bounded replay to
+    its last processed id);
+  * cutover steps and the listener/condition helpers migrations use to
+    observe pod progress without leaking callbacks.
+
+``MigrationContext`` carries the per-migration state (source, target node,
+policy, report, secondary queue, listener subscriptions) and exposes the
+primitives as methods, so a strategy body reads as its phase pipeline.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Generator, List, Optional, Type
+
+from repro.cluster.cluster import APIServer, Pod
+from repro.cluster.sim import Condition, Sim
+from repro.core.policy import MigrationPolicy, MigrationReport
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Type["MigrationStrategy"]] = {}
+
+
+def register_strategy(name: str) -> Callable[[Type["MigrationStrategy"]],
+                                             Type["MigrationStrategy"]]:
+    """Class decorator adding a strategy to the global registry."""
+
+    def deco(cls: Type["MigrationStrategy"]) -> Type["MigrationStrategy"]:
+        if not issubclass(cls, MigrationStrategy):
+            raise TypeError(f"{cls!r} must subclass MigrationStrategy")
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def get_strategy(name: str) -> Type["MigrationStrategy"]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown migration strategy {name!r}; "
+            f"available: {available_strategies()}") from None
+
+
+def available_strategies() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# Pod-observation helpers (listener bookkeeping + wait conditions)
+# ---------------------------------------------------------------------------
+
+def listen(pod: Pod, fn: Callable, subs: List) -> None:
+    """Subscribe ``fn`` to the pod's processed events, recording the
+    subscription so the migration can deregister it on completion."""
+    pod.add_on_processed(fn)
+    subs.append((pod, fn))
+
+
+def unlisten_all(subs: List) -> None:
+    for pod, fn in subs:
+        pod.remove_on_processed(fn)
+    subs.clear()
+
+
+def sync_condition(sim: Sim, target_pod: Pod, source_pod: Pod,
+                   secondary, subs: List) -> Condition:
+    """Triggered when target has replayed everything the source has
+    processed and the mirror buffer is empty."""
+    cond = sim.condition("synced")
+
+    def check(*_):
+        if (secondary.depth() == 0
+                and target_pod.worker.last_msg_id >= source_pod.worker.last_msg_id):
+            cond.trigger()
+
+    listen(target_pod, check, subs)
+    listen(source_pod, check, subs)
+    check()
+    return cond
+
+
+def drain_condition(sim: Sim, target_pod: Pod, up_to_id: int,
+                    secondary, subs: List) -> Condition:
+    """Triggered when target has replayed ids <= up_to_id.
+
+    The empty-mirror short-circuit exists for ids the mirror can never
+    deliver (messages consumed from the primary before the secondary
+    was attached).  It may only fire when no more mirrored traffic can
+    arrive for the target: the mirror is empty AND nothing is in
+    flight (mid-service) at the target — a momentarily-empty mirror
+    while the last mirrored message is still being folded must NOT
+    trigger a premature cutover (that dropped the in-flight message's
+    state update from the downtime accounting and switched routes
+    before the target was caught up)."""
+    cond = sim.condition("drained")
+
+    def check(*_):
+        if target_pod.worker.last_msg_id >= up_to_id or (
+                secondary.depth() == 0 and not target_pod.busy):
+            cond.trigger()
+
+    listen(target_pod, check, subs)
+    check()
+    return cond
+
+
+# ---------------------------------------------------------------------------
+# Per-migration context: state + phase primitives
+# ---------------------------------------------------------------------------
+
+class MigrationContext:
+    """Everything one migration needs: control-plane handles, the policy,
+    the report under construction, and the phase primitives."""
+
+    def __init__(self, manager, source: Pod, target_node: str,
+                 identity: Optional[str], policy: MigrationPolicy,
+                 strategy_name: str, n: int):
+        self.manager = manager
+        self.api: APIServer = manager.api
+        self.sim: Sim = manager.sim
+        self.broker = manager.broker
+        self.make_worker = manager.make_worker
+        self.primary_queue: str = manager.primary_queue
+        self.cutoff = manager.cutoff
+        self.policy = policy
+        self.source = source
+        self.target_node = target_node
+        self.identity = identity
+        self.n = n
+        self.report = MigrationReport(strategy_name, self.sim.now)
+        self.subs: List = []   # processed-event listeners, removed on cleanup
+        self.secondary = None  # the mirror queue, once attached
+
+    # -- trace ----------------------------------------------------------------
+    def emit(self, kind: str, **data: Any):
+        return self.report.emit(kind, self.sim.now, **data)
+
+    def phase(self, name: str, t0: float) -> None:
+        self.emit("phase", phase=name, duration=self.sim.now - t0)
+
+    # -- mirror / conditions --------------------------------------------------
+    def attach_secondary(self):
+        self.secondary = self.broker.attach_secondary(
+            self.primary_queue, f"{self.primary_queue}.sec{self.n}")
+        return self.secondary
+
+    def sync_condition(self, target: Pod) -> Condition:
+        return sync_condition(self.sim, target, self.source, self.secondary,
+                              self.subs)
+
+    def drain_condition(self, target: Pod, up_to_id: int) -> Condition:
+        return drain_condition(self.sim, target, up_to_id, self.secondary,
+                               self.subs)
+
+    def switch_to_primary(self, target: Pod) -> None:
+        self.broker.detach_secondary(self.primary_queue, self.secondary.name)
+        target.queue = self.broker.queues[self.primary_queue]
+        target.wake()  # unblock if it was waiting on the secondary
+
+    def cleanup(self) -> None:
+        """Always-run teardown: deregister listeners (repeated migrations
+        of one lineage must not fire stale checks) and detach the mirror
+        if the migration died before cutover (an orphan mirror would
+        double-buffer every future publish into a queue nothing drains)."""
+        unlisten_all(self.subs)
+        if (self.secondary is not None
+                and self.broker.is_mirrored(self.primary_queue,
+                                            self.secondary.name)):
+            self.broker.detach_secondary(self.primary_queue,
+                                         self.secondary.name)
+
+    # -- transfer phase -------------------------------------------------------
+    def transfer(self, use_precopy: bool, pre_tag: str,
+                 full_tag: str) -> Generator:
+        """Checkpoint-transfer phase via the policy-selected engine."""
+        engine = (IterativePrecopyTransfer(pre_tag) if use_precopy
+                  else SingleShotTransfer(full_tag))
+        push = yield from engine.run(self)
+        return push
+
+    def full_transfer(self, tag: str) -> Generator:
+        """Checkpoint + full image push, with phase/report accounting.
+        Returns (checkpoint dict, PushReport)."""
+        rep = self.report
+        t0 = self.sim.now
+        ckpt = yield from self.api.checkpoint_pod(self.source)  # still serving
+        rep.checkpoint_marker = ckpt["last_msg_id"]
+        self.phase("checkpoint", t0)
+
+        t0 = self.sim.now
+        push = yield from self.api.build_and_push_image(ckpt, tag)
+        rep.image_id = push.image_id
+        rep.image_written_bytes = push.written_bytes
+        rep.image_deduped_bytes = push.deduped_bytes
+        self.phase("image_build_push", t0)
+        return ckpt, push
+
+    # -- target restoration ---------------------------------------------------
+    def restore_target(self, push, queue, *, replay: bool = True,
+                       identity: Optional[str] = None) -> Generator:
+        """Create the target pod and restore the pushed image into it.
+        With ``replay`` the pod consumes at the (possibly batched) replay
+        rate until cutover restores the service rate."""
+        t0 = self.sim.now
+        worker = self.make_worker()
+        worker.skip_until = self.report.checkpoint_marker
+        proc_ms = self.source.processing_ms
+        if replay:
+            proc_ms = proc_ms / self.policy.replay_speedup
+        target = yield from self.api.create_pod(
+            f"{self.source.name}-target-{self.n}", self.target_node, worker,
+            queue, statefulset_identity=identity, processing_ms=proc_ms)
+        yield from self.api.pull_and_restore(push.image_id, worker,
+                                             node_name=self.target_node)
+        self.phase("service_restoration", t0)
+        return target
+
+    # -- cutover / teardown steps ---------------------------------------------
+    def finish(self, target: Pod) -> None:
+        self.report.t_end = self.sim.now
+        self.emit("migration_end", target=target.name,
+                  downtime=self.report.downtime)
+
+    def teardown_source(self) -> Generator:
+        t0 = self.sim.now
+        yield from self.api.delete_pod(self.source.name)
+        self.phase("source_teardown", t0)
+
+    # -- telemetry probes (used by adaptive strategies) -----------------------
+    def state_nbytes(self) -> int:
+        """Approximate serialized size of the source worker's state tree —
+        the wire cost of one full checkpoint image."""
+        return _tree_nbytes(self.source.worker.state_tree())
+
+    def observed_rates(self) -> tuple:
+        """(lambda, mu) estimates: the CutoffController's view when one is
+        wired (EWMA estimates or operator fallbacks), else arrival
+        throughput observed on the primary queue and the service capacity
+        implied by the pod's processing time."""
+        if self.cutoff is not None:
+            return self.cutoff.lam, self.cutoff.mu
+        q = self.broker.queues[self.primary_queue]
+        lam = q.total_published / self.sim.now if self.sim.now > 0 else 0.0
+        mu = 1000.0 / self.source.processing_ms
+        return lam, mu
+
+
+def _tree_nbytes(tree: Any) -> int:
+    if isinstance(tree, dict):
+        return sum(_tree_nbytes(v) for v in tree.values())
+    if isinstance(tree, (list, tuple)):
+        return sum(_tree_nbytes(v) for v in tree)
+    nbytes = getattr(tree, "nbytes", None)
+    if nbytes is not None:
+        return int(nbytes)
+    if isinstance(tree, (bytes, bytearray)):
+        return len(tree)
+    return 8  # python scalar
+
+
+# ---------------------------------------------------------------------------
+# Transfer engines
+# ---------------------------------------------------------------------------
+
+class TransferEngine:
+    """Moves the source's state image to where the target can restore it.
+    ``run(ctx)`` returns the final PushReport (and records the checkpoint
+    marker on the report)."""
+
+    def run(self, ctx: MigrationContext) -> Generator:
+        raise NotImplementedError
+
+
+class SingleShotTransfer(TransferEngine):
+    """One checkpoint + one full image push (the paper's scheme)."""
+
+    def __init__(self, tag: str):
+        self.tag = tag
+
+    def run(self, ctx: MigrationContext) -> Generator:
+        _, push = yield from ctx.full_transfer(self.tag)
+        return push
+
+
+class IterativePrecopyTransfer(TransferEngine):
+    """One full checkpoint+push, then checkpoint -> delta-push rounds while
+    the source keeps serving.  Every image is prefetched onto the target
+    node, so the final restore pulls ~nothing; the loop stops when the
+    inter-round dirty set (messages processed between two consecutive
+    checkpoints) converges.  The replay log left for the target is bounded
+    by the LAST round's traffic instead of the whole transfer."""
+
+    def __init__(self, tag: str):
+        self.tag = tag
+
+    def run(self, ctx: MigrationContext) -> Generator:
+        api, sim, rep, pol = ctx.api, ctx.sim, ctx.report, ctx.policy
+        source, tag = ctx.source, self.tag
+        base = source.worker.last_msg_id  # lineage may predate this migration
+        ckpt, push = yield from ctx.full_transfer(f"{tag}-r0")
+        t0 = sim.now
+        yield from api.prefetch_image(ctx.target_node, push.image_id)
+        ctx.phase("precopy_prefetch", t0)
+        rep.precopy_round_bytes.append(push.delta_bytes)
+        rep.precopy_round_dirty.append(ckpt["last_msg_id"] - base)
+        marker = ckpt["last_msg_id"]
+        ctx.emit("precopy_round", round=0, bytes=push.delta_bytes,
+                 dirty=ckpt["last_msg_id"] - base)
+
+        prev_dirty: Optional[int] = None
+        while rep.precopy_rounds < pol.precopy_max_rounds:
+            # phases stay comparable across strategies: dumps are always
+            # booked as "checkpoint", only delta build/push/prefetch as
+            # the precopy-specific phases
+            t0 = sim.now
+            ckpt = yield from api.checkpoint_pod(source)
+            ctx.phase("checkpoint", t0)
+            dirty = ckpt["last_msg_id"] - marker
+            if dirty <= pol.precopy_min_dirty:
+                # nothing dirtied since the last round (e.g. source already
+                # paused by the cutoff): the previous image already holds
+                # this exact state — don't pay for a bit-identical push
+                break
+            t0 = sim.now
+            delta = yield from api.push_delta_image(
+                ckpt, f"{tag}-r{rep.precopy_rounds + 1}", push.image_id)
+            yield from api.prefetch_image(ctx.target_node, delta.image_id)
+            ctx.phase("precopy_delta", t0)
+            push = delta
+            marker = ckpt["last_msg_id"]
+            rep.precopy_rounds += 1
+            rep.precopy_round_bytes.append(delta.delta_bytes)
+            rep.precopy_round_dirty.append(dirty)
+            rep.image_written_bytes += delta.written_bytes
+            rep.image_deduped_bytes += delta.deduped_bytes
+            ctx.emit("precopy_round", round=rep.precopy_rounds,
+                     bytes=delta.delta_bytes, dirty=dirty)
+            if (prev_dirty is not None
+                    and dirty >= prev_dirty * pol.precopy_converge_ratio):
+                break  # dirty set stopped shrinking: steady state reached
+            prev_dirty = dirty
+        rep.checkpoint_marker = marker
+        rep.image_id = push.image_id
+        return push
+
+
+# ---------------------------------------------------------------------------
+# Catch-up disciplines
+# ---------------------------------------------------------------------------
+
+class CatchupDiscipline:
+    """How the target catches up with mirrored traffic before cutover.
+
+    ``arm`` runs when accumulation starts (secondary attached, before the
+    transfer); ``catchup`` runs after the target is restored and started;
+    ``begin_cutover`` pauses the source (or reuses an earlier stop) and
+    returns the instant downtime started."""
+
+    def arm(self, ctx: MigrationContext) -> None:
+        pass
+
+    def catchup(self, ctx: MigrationContext, target: Pod) -> Generator:
+        raise NotImplementedError
+        yield  # pragma: no cover
+
+    def begin_cutover(self, ctx: MigrationContext) -> float:
+        ctx.source.pause()
+        return ctx.sim.now
+
+
+class LiveSyncCatchup(CatchupDiscipline):
+    """Target replays the mirror while the source keeps serving, until it
+    has seen everything the source has (paper Fig. 2)."""
+
+    def catchup(self, ctx: MigrationContext, target: Pod) -> Generator:
+        yield ctx.sync_condition(target)
+
+
+class ThresholdCutoffCatchup(CatchupDiscipline):
+    """Live sync under the Threshold-Based Cutoff (paper Fig. 3, Eq. 5):
+    when T_accum hits the deadline, the SOURCE STOPS — even mid-transfer —
+    capping the replay log at N <= lam * T_cutoff so that
+    T_replay <= T_replay_max by construction."""
+
+    def __init__(self, deadline: float):
+        self.deadline = deadline
+        self.state: dict = {"fired": False, "pause_time": None, "id": None}
+
+    def arm(self, ctx: MigrationContext) -> None:
+        self.fired_cond = ctx.sim.condition("cutoff-fired")
+        source, state = ctx.source, self.state
+
+        def _fire():
+            if (not state["fired"] and not source.paused
+                    and not source.deleted):
+                state["fired"] = True
+                state["pause_time"] = ctx.sim.now
+                source.pause()
+                state["id"] = source.worker.last_msg_id
+                ctx.emit("cutoff_fired", cutoff_id=state["id"],
+                         deadline=self.deadline)
+                self.fired_cond.trigger()
+
+        ctx.sim.call_at(ctx.sim.now + self.deadline, _fire)
+
+    def catchup(self, ctx: MigrationContext, target: Pod) -> Generator:
+        if self.state["fired"]:
+            # source already stopped (deadline expired mid-transfer):
+            # bounded replay to the frozen cutoff id
+            yield ctx.drain_condition(target, self.state["id"])
+            return
+        synced = ctx.sync_condition(target)
+        yield ctx.sim.any_of(synced, self.fired_cond)
+        if self.state["fired"] and not synced.triggered:
+            # fired mid-catch-up: bounded drain to the frozen id
+            yield ctx.drain_condition(target, self.state["id"])
+
+    def begin_cutover(self, ctx: MigrationContext) -> float:
+        if self.state["fired"]:
+            ctx.report.cutoff_fired = True
+            ctx.report.cutoff_id = self.state["id"]
+            return self.state["pause_time"]  # downtime began at the pause
+        ctx.source.pause()
+        return ctx.sim.now
+
+
+class StopThenReplayCatchup(CatchupDiscipline):
+    """Source is already stopped (sticky-identity handoff, paper Fig. 4):
+    bounded replay of the mirror up to the source's last processed id."""
+
+    def __init__(self, up_to_id: int):
+        self.up_to_id = up_to_id
+
+    def catchup(self, ctx: MigrationContext, target: Pod) -> Generator:
+        yield ctx.drain_condition(target, self.up_to_id)
+
+
+# ---------------------------------------------------------------------------
+# Strategy base class
+# ---------------------------------------------------------------------------
+
+class MigrationStrategy:
+    """One migration scheme, expressed as a pipeline of phase primitives.
+
+    Subclass, implement ``run(ctx)`` as a sim generator returning
+    ``(report, target_pod)``, and register with ``@register_strategy``.
+    Class attributes declare control-plane needs so harnesses and the
+    manager stay scheme-agnostic:
+
+      * ``handles_identity`` — may receive a StatefulSet identity handoff;
+      * ``wants_cutoff``     — harnesses should provision a
+        CutoffController (consulted via ``ctx.cutoff``).
+    """
+
+    name: str = "?"                 # set by @register_strategy
+    handles_identity: bool = False
+    wants_cutoff: bool = False
+
+    def run(self, ctx: MigrationContext) -> Generator:
+        raise NotImplementedError
+        yield  # pragma: no cover

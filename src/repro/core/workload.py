@@ -7,6 +7,10 @@ One experiment = paper evaluation §IV-B:
   MigrationReport, then *verify* the migrated state: an independent
   reference consumer folds the full message log 0..last_msg_id from scratch
   and must match the target bit-exactly (allclose for batched replay).
+
+Migration behaviour is configured with one declarative ``MigrationPolicy``;
+the legacy ``batched_replay=`` / ``replay_speedup=`` / ``precopy=`` /
+``manager_kwargs=`` knobs are still accepted and folded into the policy.
 """
 from __future__ import annotations
 
@@ -21,6 +25,7 @@ from repro.cluster.cluster import Cluster, TimingConstants
 from repro.core.consumer import StatefulConsumer
 from repro.core.cutoff import CutoffController
 from repro.core.migration import MigrationManager, MigrationReport
+from repro.core.policy import MigrationPolicy
 from repro import configs
 
 
@@ -29,7 +34,7 @@ class HashConsumer:
     message log.  Still an exact fold (order-sensitive), so migration
     correctness remains fully checkable without JAX compute."""
 
-    def __init__(self, name: str = "hash"):
+    def __init__(self):
         self.digest = np.uint64(1469598103934665603)
         self.pos = 0
         self.last_msg_id = -1
@@ -83,11 +88,13 @@ class ExperimentResult:
             "replayed": self.report.replayed_messages,
             "cutoff_fired": self.report.cutoff_fired,
             "verified": self.verified,
+            "state_verified": self.report.state_verified,
             "phases": {k: round(v, 3) for k, v in self.report.phases.items()},
             "image_written_bytes": self.report.image_written_bytes,
             "image_deduped_bytes": self.report.image_deduped_bytes,
             "precopy_rounds": self.report.precopy_rounds,
             "precopy_round_bytes": list(self.report.precopy_round_bytes),
+            "precopy_round_dirty": list(self.report.precopy_round_dirty),
         }
 
 
@@ -119,6 +126,27 @@ def make_jax_worker_factory(max_seq: int = 512):
     return make, cfg
 
 
+def resolve_experiment_policy(
+    policy: Optional[MigrationPolicy],
+    batched_replay: Optional[bool],
+    replay_speedup: Optional[float],
+    precopy: Optional[bool],
+    manager_kwargs: Optional[Dict[str, Any]],
+) -> MigrationPolicy:
+    """Legacy-knob compatibility: historically ``replay_speedup`` only took
+    effect together with ``batched_replay=True`` (a measured batching
+    speedup makes no sense for sequential replay), so the fold preserves
+    that coupling before handing over one declarative policy."""
+    base = MigrationPolicy.resolve(policy, **(manager_kwargs or {}))
+    batched = (base.batched_replay if batched_replay is None
+               else batched_replay)
+    if replay_speedup is not None:
+        replay_speedup = replay_speedup if batched else 1.0
+    return MigrationPolicy.resolve(
+        base, batched_replay=batched_replay, replay_speedup=replay_speedup,
+        precopy=precopy)
+
+
 def run_migration_experiment(
     strategy: str,
     message_rate: float,
@@ -130,14 +158,18 @@ def run_migration_experiment(
     seed: int = 0,
     timings: Optional[TimingConstants] = None,
     worker_factory: Optional[Callable] = None,
-    batched_replay: bool = False,
-    replay_speedup: float = 1.0,
     settle_time: float = 5.0,
     verify: bool = True,
-    precopy: bool = False,
     chunk_bytes: Optional[int] = None,
+    policy: Optional[MigrationPolicy] = None,
+    # legacy knobs, folded into the policy (None = unset):
+    batched_replay: Optional[bool] = None,
+    replay_speedup: Optional[float] = None,
+    precopy: Optional[bool] = None,
     manager_kwargs: Optional[Dict[str, Any]] = None,
 ) -> ExperimentResult:
+    pol = resolve_experiment_policy(policy, batched_replay, replay_speedup,
+                                    precopy, manager_kwargs)
     timings = timings or TimingConstants()
     timings = dataclasses.replace(timings, processing_ms=processing_ms)
     cluster = Cluster(registry_root, timings=timings, num_nodes=3,
@@ -151,7 +183,7 @@ def run_migration_experiment(
     # -- adaptive cutoff controller (λ̂/μ̂ EWMA-estimated online) ------------
     cutoff = CutoffController(
         t_replay_max=t_replay_max, mu_fallback=mu, lam_fallback=message_rate,
-        batch_speedup=replay_speedup if batched_replay else 1.0)
+        batch_speedup=pol.replay_speedup if pol.batched_replay else 1.0)
 
     # -- producer: Poisson(λ), deterministic --------------------------------
     rng = np.random.default_rng(seed)
@@ -185,9 +217,7 @@ def run_migration_experiment(
 
     # -- migration -------------------------------------------------------------
     mgr = MigrationManager(api, make_worker, "orders", cutoff=cutoff,
-                           batched_replay=batched_replay,
-                           replay_speedup=replay_speedup if batched_replay else 1.0,
-                           precopy=precopy, **(manager_kwargs or {}))
+                           policy=pol)
     done = mgr.migrate(strategy, source, "node1")
     sim.run(stop_when=done)
     report, target = done.value
@@ -201,7 +231,8 @@ def run_migration_experiment(
     verified = True
     if verify:
         ref = reference_fold(make_worker, published, target.worker.last_msg_id)
-        verified = ref.state_equal(target.worker, exact=not batched_replay)
+        verified = ref.state_equal(target.worker, exact=not pol.batched_replay)
+        report.state_verified = bool(verified)
 
     return ExperimentResult(
         report=report,

@@ -7,14 +7,21 @@
 Runs the full workload (producer -> consumer pod -> migration -> verify)
 on the virtual-time cluster with a real JAX consumer and prints the
 MigrationReport (phases, downtime, image bytes, verification).
+
+The strategy list comes from the registry, so operator-registered schemes
+(imported via ``--strategy-module``) are drivable without touching this
+file.
 """
 from __future__ import annotations
 
 import argparse
+import importlib
 import json
 import tempfile
 
 from repro.core import (
+    MigrationPolicy,
+    available_strategies,
     make_jax_worker_factory,
     measure_replay_speedup,
     run_migration_experiment,
@@ -22,10 +29,21 @@ from repro.core import (
 
 
 def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
+    # pre-parse --strategy-module on a separate help-less parser so custom
+    # schemes register before --strategy choices are validated, without
+    # swallowing -h/--help or prefix-matching --strategy
+    module_help = ("import this module first (for @register_strategy side "
+                   "effects) so custom schemes are available")
+    pre_ap = argparse.ArgumentParser(add_help=False, allow_abbrev=False)
+    pre_ap.add_argument("--strategy-module", default=None)
+    pre, _ = pre_ap.parse_known_args(argv)
+    if pre.strategy_module:
+        importlib.import_module(pre.strategy_module)
+
+    ap = argparse.ArgumentParser(allow_abbrev=False)
+    ap.add_argument("--strategy-module", default=None, help=module_help)
     ap.add_argument("--strategy", default="ms2m_individual",
-                    choices=["stop_and_copy", "ms2m_individual",
-                             "ms2m_cutoff", "ms2m_statefulset"])
+                    choices=available_strategies())
     ap.add_argument("--rate", type=float, default=10.0)
     ap.add_argument("--processing-ms", type=float, default=50.0)
     ap.add_argument("--t-replay-max", type=float, default=45.0)
@@ -34,6 +52,11 @@ def main(argv=None) -> int:
     ap.add_argument("--hash-consumer", action="store_true",
                     help="cheap fold worker instead of the JAX model")
     ap.add_argument("--batched-replay", action="store_true")
+    ap.add_argument("--precopy", action="store_true",
+                    help="iterative delta pre-copy transfer engine")
+    ap.add_argument("--precopy-max-rounds", type=int, default=5)
+    ap.add_argument("--events", action="store_true",
+                    help="also print the structured MigrationEvent trace")
     args = ap.parse_args(argv)
 
     worker_factory = None
@@ -46,13 +69,21 @@ def main(argv=None) -> int:
                                              max_seq=512)
             print(f"[migrate] measured replay speedup: {speedup:.1f}x")
 
+    policy = MigrationPolicy(
+        batched_replay=args.batched_replay,
+        replay_speedup=speedup if args.batched_replay else 1.0,
+        precopy=args.precopy,
+        precopy_max_rounds=args.precopy_max_rounds,
+        t_replay_max=args.t_replay_max,
+    )
     registry = args.registry or tempfile.mkdtemp(prefix="repro-registry-")
     r = run_migration_experiment(
         args.strategy, args.rate, registry_root=registry,
         processing_ms=args.processing_ms, t_replay_max=args.t_replay_max,
-        seed=args.seed, worker_factory=worker_factory,
-        batched_replay=args.batched_replay, replay_speedup=speedup)
+        seed=args.seed, worker_factory=worker_factory, policy=policy)
     print(json.dumps(r.row(), indent=2))
+    if args.events:
+        print(json.dumps(r.report.event_rows(), indent=2))
     print(f"[migrate] downtime={r.downtime:.2f}s "
           f"migration={r.migration_time:.2f}s verified={r.verified}")
     return 0 if r.verified else 1

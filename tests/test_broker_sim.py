@@ -119,3 +119,62 @@ def test_pod_requeues_message_interrupted_by_pause(tmp_path):
     pod.wake()
     sim.run(until=5.0)
     assert worker.n_processed == 1
+
+
+def _boot_one_pod(tmp_path, qname="q"):
+    from repro.cluster.cluster import Cluster
+    from repro.core import HashConsumer
+
+    cluster = Cluster(str(tmp_path), num_nodes=1)
+    sim, api, broker = cluster.sim, cluster.api, cluster.broker
+    q = broker.declare_queue(qname)
+    worker = HashConsumer()
+
+    def boot():
+        pod = yield from api.create_pod("p", "node0", worker, q)
+        pod.start()
+        return pod
+
+    done = sim.process(boot())
+    sim.run(until=3.0)
+    return cluster, done.value, worker, q
+
+
+def test_paused_pod_contributes_no_sim_events(tmp_path):
+    """The old loop busy-polled a paused pod at 20 Hz; the condition-based
+    stall contributes ZERO events, so the heap fully drains while paused."""
+    cluster, pod, worker, q = _boot_one_pod(tmp_path)
+    sim = cluster.sim
+    pod.pause()
+    sim.run(until=4.0)      # let any in-flight wind down
+    assert sim._heap == []  # nothing scheduled: no 0.05 s poll ticks
+    sim.run(until=10_000.0)
+    assert sim.now == 10_000.0 and sim._heap == []
+
+
+def test_resume_alone_wakes_a_stalled_pod(tmp_path):
+    cluster, pod, worker, q = _boot_one_pod(tmp_path)
+    sim, broker = cluster.sim, cluster.broker
+    pod.pause()
+    sim.run(until=4.0)
+    broker.publish("q", {"token": 3})  # arrives while stalled
+    sim.run(until=5.0)
+    assert worker.n_processed == 0
+    pod.resume()  # no explicit wake() needed: resume releases the stall
+    sim.run(until=6.0)
+    assert worker.n_processed == 1
+
+
+def test_node_recovery_wakes_stalled_pods(tmp_path):
+    cluster, pod, worker, q = _boot_one_pod(tmp_path)
+    sim, api, broker = cluster.sim, cluster.api, cluster.broker
+    node = api.nodes["node0"]
+    node.alive = False  # transient partition: pods stay scheduled
+    broker.publish("q", {"token": 5})
+    sim.run(until=6.0)
+    assert worker.n_processed == 0  # stalled on the dead node, no spinning
+    assert sim._heap == []
+    api.revive_node("node0")
+    sim.run(until=8.0)
+    assert node.alive
+    assert worker.n_processed == 1

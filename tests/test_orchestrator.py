@@ -113,8 +113,135 @@ def test_drain_refuses_when_no_other_node(tmp_path):
         orch.drain_node("node0")
 
 
+def test_drain_refuses_when_all_other_nodes_dead(tmp_path):
+    """'No alive target' is about liveness, not topology: other nodes
+    exist but are all down."""
+    from repro.cluster.cluster import Cluster
+
+    cluster = Cluster(str(tmp_path / "reg"), num_nodes=3)
+    cluster.api.kill_node("node1")
+    cluster.api.kill_node("node2")
+    orch = ClusterMigrationOrchestrator(cluster.api, HashConsumer)
+    with pytest.raises(RuntimeError, match="no alive node"):
+        orch.drain_node("node0")
+
+
+def _boot_fleet(cluster, n, node="node0"):
+    """n producer/consumer pairs on one node; returns (pods, stop flag)."""
+    sim, api, broker = cluster.sim, cluster.api, cluster.broker
+    stop = {"flag": False}
+    pods = {}
+    for i in range(n):
+        qname = f"orders-{i}"
+        broker.declare_queue(qname)
+
+        def producer(i=i, qname=qname):
+            while not stop["flag"]:
+                yield 0.2
+                broker.publish(qname, {"token": (i * 131) % 997})
+
+        sim.process(producer())
+
+        def boot(i=i, qname=qname):
+            pod = yield from api.create_pod(
+                f"consumer-{i}", node, HashConsumer(), broker.queues[qname])
+            pod.start()
+            pods[i] = pod
+
+        sim.process(boot())
+    sim.run(until=8.0)
+    return pods, stop
+
+
+def test_drain_node_with_custom_target_picker(tmp_path):
+    from repro.cluster.cluster import Cluster
+
+    cluster = Cluster(str(tmp_path / "reg"), num_nodes=4)
+    sim, api = cluster.sim, cluster.api
+    pods, stop = _boot_fleet(cluster, 3)
+
+    picked = []
+
+    def everything_to_node3(pod):
+        picked.append(pod.name)
+        return "node3"  # ignore the round-robin default
+
+    orch = ClusterMigrationOrchestrator(api, HashConsumer)
+    done = orch.drain_node("node0", target_node_for=everything_to_node3)
+    sim.run(stop_when=done)
+    fleet = done.value
+    stop["flag"] = True
+    sim.run(until=sim.now + 1.0)
+
+    assert sorted(picked) == [f"consumer-{i}" for i in range(3)]
+    assert fleet.n_migrated == 3 and fleet.n_failed == 0
+    assert api.nodes["node0"].pods == {}
+    assert all(t.node.name == "node3" for t in fleet.targets)
+
+
+def test_dead_target_node_fails_spec_not_fleet(tmp_path):
+    """A spec pointing at a node that died mid-fleet is recorded in
+    FleetReport.failures; every other spec completes, and the failed
+    migration leaves no orphan mirror behind."""
+    from repro.cluster.cluster import Cluster
+
+    cluster = Cluster(str(tmp_path / "reg"), num_nodes=4)
+    sim, api, broker = cluster.sim, cluster.api, cluster.broker
+    pods, stop = _boot_fleet(cluster, 3)
+    api.kill_node("node3")  # dies before its spec's create_pod runs
+
+    orch = ClusterMigrationOrchestrator(api, HashConsumer, max_concurrent=3)
+    specs = [
+        PodMigrationSpec(pod=pods[0], queue="orders-0", target_node="node1"),
+        PodMigrationSpec(pod=pods[1], queue="orders-1", target_node="node3"),
+        PodMigrationSpec(pod=pods[2], queue="orders-2", target_node="node2"),
+    ]
+    done = orch.migrate_fleet(specs)
+    sim.run(stop_when=done)
+    fleet = done.value
+    stop["flag"] = True
+    sim.run(until=sim.now + 1.0)
+
+    assert fleet.n_migrated == 2 and fleet.n_failed == 1
+    failure = fleet.failures[0]
+    assert failure["pod"] == "consumer-1"
+    assert failure["target_node"] == "node3"
+    assert "dead" in failure["error"]
+    assert fleet.row()["n_failed"] == 1
+    # survivors moved; the failed source pod is still serving
+    assert {t.queue.name for t in fleet.targets} == {"orders-0", "orders-2"}
+    assert not pods[1].deleted
+    # the dead spec's secondary was detached on failure (no double-buffer)
+    assert broker._mirrors["orders-1"] == []
+
+
+def test_invalid_spec_fails_spec_not_fleet(tmp_path):
+    """Validation errors (identity handoff on a non-StatefulSet strategy)
+    are isolated per spec too."""
+    from repro.cluster.cluster import Cluster
+
+    cluster = Cluster(str(tmp_path / "reg"), num_nodes=3)
+    sim = cluster.sim
+    pods, stop = _boot_fleet(cluster, 2)
+
+    orch = ClusterMigrationOrchestrator(cluster.api, HashConsumer)
+    specs = [
+        PodMigrationSpec(pod=pods[0], queue="orders-0", target_node="node1",
+                         strategy="ms2m_individual", identity="consumer-0"),
+        PodMigrationSpec(pod=pods[1], queue="orders-1", target_node="node2"),
+    ]
+    done = orch.migrate_fleet(specs)
+    sim.run(stop_when=done)
+    fleet = done.value
+    stop["flag"] = True
+
+    assert fleet.n_migrated == 1 and fleet.n_failed == 1
+    assert "ms2m_statefulset" in fleet.failures[0]["error"]
+
+
 def test_spec_defaults_roundtrip():
     # PodMigrationSpec is a plain dataclass usable without the harness
     spec = PodMigrationSpec(pod=None, queue="q", target_node="node1")
     assert spec.strategy == "ms2m_individual"
     assert spec.identity is None
+    assert spec.policy is None

@@ -1,0 +1,366 @@
+"""The pluggable strategy registry + declarative MigrationPolicy API:
+built-in registration, custom strategies with zero manager-core edits,
+legacy-kwarg compatibility, the structured MigrationEvent stream, and the
+telemetry-driven ms2m_adaptive scheme."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.cluster.cluster import Cluster, TimingConstants
+from repro.core import (
+    HashConsumer,
+    MigrationManager,
+    MigrationPolicy,
+    MigrationStrategy,
+    available_strategies,
+    choose_adaptive_strategy,
+    get_strategy,
+    register_strategy,
+    run_fleet_experiment,
+    run_migration_experiment,
+)
+
+BUILTINS = ("stop_and_copy", "ms2m_individual", "ms2m_cutoff",
+            "ms2m_statefulset", "ms2m_precopy", "ms2m_adaptive")
+
+
+# ---------------------------------------------------------------------------
+# Registry surface
+# ---------------------------------------------------------------------------
+
+def test_builtin_strategies_registered():
+    names = available_strategies()
+    for name in BUILTINS:
+        assert name in names
+    assert get_strategy("ms2m_cutoff").wants_cutoff
+    assert get_strategy("ms2m_statefulset").handles_identity
+    assert not get_strategy("ms2m_individual").handles_identity
+
+
+def test_unknown_strategy_lists_available(tmp_path):
+    with pytest.raises(ValueError, match="ms2m_individual"):
+        get_strategy("ms2m_nope")
+    mgr = MigrationManager(Cluster(str(tmp_path)).api, HashConsumer, "q")
+    with pytest.raises(ValueError, match="unknown migration strategy"):
+        mgr.migrate("ms2m_nope", None, "node1")
+
+
+def test_misconfigured_cutoff_leaves_no_mirror(tmp_path):
+    """ms2m_cutoff without a CutoffController fails fast, and the failure
+    must not leave a secondary queue attached (double-buffer leak)."""
+    cluster = Cluster(str(tmp_path / "reg"), num_nodes=2)
+    broker = cluster.broker
+    broker.declare_queue("orders")
+    holder = {}
+
+    def boot():
+        pod = yield from cluster.api.create_pod(
+            "c0", "node0", HashConsumer(), broker.queues["orders"])
+        pod.start()
+        holder["pod"] = pod
+
+    cluster.sim.process(boot())
+    cluster.sim.run(until=5.0)
+
+    mgr = MigrationManager(cluster.api, HashConsumer, "orders")  # no cutoff
+    mgr.migrate("ms2m_cutoff", holder["pod"], "node1")
+    with pytest.raises(AssertionError, match="CutoffController"):
+        cluster.sim.run(until=10.0)
+    assert broker._mirrors["orders"] == []
+
+
+def test_custom_strategy_runs_through_harness_unchanged(tmp_path):
+    """Extensibility proof: a scheme registered from *outside* the core
+    runs through run_migration_experiment by name and verifies bit-exact —
+    no manager / harness edits."""
+
+    @register_strategy("test_eager_stop_and_copy")
+    class EagerStopAndCopy(MigrationStrategy):
+        # stop-and-copy but with the pre-copy transfer engine: the pod is
+        # paused, so the single delta round finds nothing dirty
+        def run(self, ctx):
+            t = ctx.api.timings
+            down0 = ctx.sim.now
+            ctx.source.pause()
+            push = yield from ctx.transfer(
+                True, f"{ctx.primary_queue}-x{ctx.n}",
+                f"{ctx.primary_queue}-x{ctx.n}")
+            target = yield from ctx.restore_target(
+                push, ctx.broker.queues[ctx.primary_queue], replay=False)
+            t0 = ctx.sim.now
+            yield from ctx.teardown_source()
+            yield t.route_switch_s
+            target.start()
+            ctx.phase("cutover", t0)
+            ctx.report.downtime = ctx.sim.now - down0
+            ctx.finish(target)
+            return ctx.report, target
+
+    r = run_migration_experiment(
+        "test_eager_stop_and_copy", 6.0,
+        registry_root=str(tmp_path / "reg"), seed=5)
+    assert r.verified
+    assert r.report.strategy == "test_eager_stop_and_copy"
+    assert r.report.precopy_round_dirty[0] >= 0
+
+
+# ---------------------------------------------------------------------------
+# MigrationPolicy + legacy-kwarg compatibility
+# ---------------------------------------------------------------------------
+
+def test_policy_resolve_folds_legacy_kwargs():
+    pol = MigrationPolicy.resolve(None, precopy=True, precopy_max_rounds=2)
+    assert pol.precopy and pol.precopy_max_rounds == 2
+    base = MigrationPolicy(batched_replay=True, replay_speedup=3.0)
+    assert MigrationPolicy.resolve(base).replay_speedup == 3.0
+    # None means "unset": the base policy value survives
+    assert MigrationPolicy.resolve(base, replay_speedup=None).batched_replay
+    with pytest.raises(TypeError, match="unknown migration policy"):
+        MigrationPolicy.resolve(None, not_a_knob=1)
+
+
+def test_policy_clamps_replay_speedup():
+    assert MigrationPolicy(replay_speedup=0.25).replay_speedup == 1.0
+
+
+def test_manager_legacy_kwargs_become_policy(tmp_path):
+    mgr = MigrationManager(Cluster(str(tmp_path)).api, HashConsumer, "q",
+                           precopy=True, precopy_max_rounds=7,
+                           batched_replay=True, replay_speedup=2.5)
+    assert mgr.policy == MigrationPolicy(precopy=True, precopy_max_rounds=7,
+                                         batched_replay=True,
+                                         replay_speedup=2.5)
+    # legacy attribute views still answer
+    assert mgr.precopy and mgr.precopy_max_rounds == 7
+    assert mgr.batched_replay and mgr.replay_speedup == 2.5
+
+
+def test_experiment_policy_object_equivalent_to_legacy_kwargs(tmp_path):
+    legacy = run_migration_experiment(
+        "ms2m_statefulset", 8.0, registry_root=str(tmp_path / "a"), seed=1,
+        precopy=True, manager_kwargs={"precopy_max_rounds": 2})
+    declarative = run_migration_experiment(
+        "ms2m_statefulset", 8.0, registry_root=str(tmp_path / "b"), seed=1,
+        policy=MigrationPolicy(precopy=True, precopy_max_rounds=2))
+    assert legacy.verified and declarative.verified
+    assert legacy.report.phases == declarative.report.phases
+    assert legacy.downtime == declarative.downtime
+    assert (legacy.report.precopy_round_bytes
+            == declarative.report.precopy_round_bytes)
+
+
+# ---------------------------------------------------------------------------
+# MigrationEvent trace stream
+# ---------------------------------------------------------------------------
+
+def test_event_stream_carries_phases_and_cutoff(tmp_path):
+    r = run_migration_experiment(
+        "ms2m_cutoff", 18.0, registry_root=str(tmp_path / "reg"), seed=1,
+        t_replay_max=20.0)
+    assert r.report.cutoff_fired
+    kinds = [e.kind for e in r.report.events]
+    assert "cutoff_fired" in kinds and "migration_end" in kinds
+    fired = next(e for e in r.report.events if e.kind == "cutoff_fired")
+    assert fired.data["cutoff_id"] == r.report.cutoff_id
+    # the phases dict is a pure view over phase events
+    phase_events = [e for e in r.report.events if e.kind == "phase"]
+    assert r.report.phases == {
+        name: sum(e.data["duration"] for e in phase_events
+                  if e.data["phase"] == name)
+        for name in {e.data["phase"] for e in phase_events}}
+    # events are time-ordered rows
+    rows = r.report.event_rows()
+    assert all(a["t"] <= b["t"] for a, b in zip(rows, rows[1:]))
+
+
+def test_precopy_rounds_traced_and_reported(tmp_path):
+    r = run_migration_experiment(
+        "ms2m_precopy", 10.0, registry_root=str(tmp_path / "reg"), seed=0)
+    assert r.verified
+    rounds = [e for e in r.report.events if e.kind == "precopy_round"]
+    assert len(rounds) == r.report.precopy_rounds + 1
+    assert [e.data["dirty"] for e in rounds] == r.report.precopy_round_dirty
+    row = r.row()
+    assert row["precopy_round_dirty"] == r.report.precopy_round_dirty
+    assert row["state_verified"] is True
+
+
+# ---------------------------------------------------------------------------
+# ms2m_adaptive
+# ---------------------------------------------------------------------------
+
+def test_choose_adaptive_strategy_decision_table():
+    # saturated: live sync can't converge
+    name, why = choose_adaptive_strategy(
+        19.0, 20.0, fixed_s=46.0, wire_s=0.1, t_replay_max=45.0, rho_max=0.9)
+    assert name == "ms2m_cutoff" and why["reason"] == "unstable_for_live_sync"
+    # byte-dominated transfer: iterative pre-copy regime
+    name, why = choose_adaptive_strategy(
+        4.0, 20.0, fixed_s=9.0, wire_s=20.0, t_replay_max=45.0)
+    assert name == "ms2m_precopy" and why["reason"] == "byte_dominated_transfer"
+    # stable but catch-up exceeds the bound
+    name, why = choose_adaptive_strategy(
+        16.0, 20.0, fixed_s=46.0, wire_s=0.1, t_replay_max=45.0)
+    assert name == "ms2m_cutoff"
+    assert why["reason"] == "catchup_exceeds_replay_bound"
+    # easy regime
+    name, why = choose_adaptive_strategy(
+        4.0, 20.0, fixed_s=46.0, wire_s=0.1, t_replay_max=45.0)
+    assert name == "ms2m_individual" and why["reason"] == "stable_and_cheap"
+
+
+def _adaptive_choice(result):
+    ev = [e for e in result.report.events if e.kind == "adaptive_choice"]
+    assert len(ev) == 1
+    return ev[0].data
+
+
+def test_adaptive_low_rate_picks_individual_and_verifies(tmp_path):
+    r = run_migration_experiment(
+        "ms2m_adaptive", 4.0, registry_root=str(tmp_path / "reg"), seed=2)
+    assert r.verified  # bit-exact against the reference fold
+    assert r.report.strategy == "ms2m_adaptive"
+    assert _adaptive_choice(r)["chosen"] == "ms2m_individual"
+
+
+def test_adaptive_saturated_rate_picks_cutoff(tmp_path):
+    r = run_migration_experiment(
+        "ms2m_adaptive", 19.0, registry_root=str(tmp_path / "reg"), seed=2)
+    assert r.verified
+    assert _adaptive_choice(r)["chosen"] == "ms2m_cutoff"
+    assert r.report.cutoff_fired  # the delegate's telemetry flows through
+
+
+class BlobConsumer(HashConsumer):
+    """Hash fold plus a mostly-static 8 MiB blob: byte-dominated images."""
+
+    def __init__(self):
+        super().__init__()
+        self.blob = np.zeros(1 << 21, dtype=np.float32)
+
+    def process(self, msg):
+        super().process(msg)
+        i = (msg.msg_id * 1024) % (len(self.blob) - 1024)
+        self.blob[i: i + 1024] += 1.0
+
+    def state_tree(self):
+        tree = super().state_tree()
+        tree["blob"] = self.blob.copy()
+        return tree
+
+    def load_state(self, tree):
+        super().load_state(tree)
+        self.blob = np.array(tree["blob"], dtype=np.float32)
+
+    def state_equal(self, other, exact: bool = True):
+        return (super().state_equal(other, exact)
+                and np.array_equal(self.blob, other.blob))
+
+
+def test_adaptive_byte_dominated_picks_precopy(tmp_path):
+    wan = TimingConstants(checkpoint_s=1.0, image_build_s=2.0,
+                          delta_build_s=0.5, push_base_s=0.5,
+                          pull_base_s=0.5, restore_s=2.0,
+                          registry_bw_Bps=1e6)
+    r = run_migration_experiment(
+        "ms2m_adaptive", 6.0, registry_root=str(tmp_path / "reg"), seed=3,
+        timings=wan, worker_factory=BlobConsumer, chunk_bytes=64 * 1024)
+    assert r.verified
+    choice = _adaptive_choice(r)
+    assert choice["chosen"] == "ms2m_precopy"
+    assert choice["wire_s"] > choice["fixed_s"]
+    assert r.report.precopy_rounds >= 1
+
+
+def test_adaptive_runs_in_fleet_harness(tmp_path):
+    fleet = run_fleet_experiment(
+        3, "ms2m_adaptive", 8.0, registry_root=str(tmp_path / "reg"),
+        mode="parallel", max_concurrent=3, seed=4)
+    assert fleet.n_migrated == 3 and fleet.n_failed == 0
+    assert fleet.all_verified
+    assert all(r.strategy == "ms2m_adaptive" for r in fleet.reports)
+    assert "ms2m_adaptive" in fleet.row()["downtime_by_strategy"]
+
+
+def test_adaptive_without_controller_synthesizes_cutoff(tmp_path):
+    """Direct manager use, no CutoffController wired: the adaptive scheme
+    must still be able to take the cutoff path from observed rates."""
+    cluster = Cluster(str(tmp_path / "reg"), num_nodes=3)
+    sim, api, broker = cluster.sim, cluster.api, cluster.broker
+    broker.declare_queue("orders")
+    stop = {"flag": False}
+
+    def producer():
+        rng = np.random.default_rng(0)
+        while not stop["flag"]:
+            yield float(rng.exponential(1.0 / 19.0))  # ~rho = 0.95
+            broker.publish("orders", {"token": int(rng.integers(0, 99))})
+
+    sim.process(producer())
+    holder = {}
+
+    def boot():
+        pod = yield from api.create_pod("c0", "node0", HashConsumer(),
+                                        broker.queues["orders"])
+        pod.start()
+        holder["pod"] = pod
+
+    sim.process(boot())
+    sim.run(until=10.0)
+
+    mgr = MigrationManager(api, HashConsumer, "orders",
+                           policy=MigrationPolicy(t_replay_max=20.0))
+    done = mgr.migrate("ms2m_adaptive", holder["pod"], "node1")
+    sim.run(stop_when=done)
+    stop["flag"] = True
+    report, target = done.value
+    choice = next(e for e in report.events if e.kind == "adaptive_choice")
+    assert choice.data["chosen"] == "ms2m_cutoff"
+    assert report.t_end > report.t_start and not target.deleted
+
+
+# ---------------------------------------------------------------------------
+# Per-spec policy override in the orchestrator
+# ---------------------------------------------------------------------------
+
+def test_fleet_spec_policy_overrides_fleet_policy(tmp_path):
+    from repro.core import ClusterMigrationOrchestrator, PodMigrationSpec
+
+    cluster = Cluster(str(tmp_path / "reg"), num_nodes=3)
+    sim, api, broker = cluster.sim, cluster.api, cluster.broker
+    stop = {"flag": False}
+    pods = {}
+    for i in range(2):
+        qname = f"orders-{i}"
+        broker.declare_queue(qname)
+
+        def producer(qname=qname):
+            while not stop["flag"]:
+                yield 0.125
+                broker.publish(qname, {"token": 7})
+
+        sim.process(producer())
+
+        def boot(i=i, qname=qname):
+            pod = yield from api.create_pod(f"c{i}", "node0", HashConsumer(),
+                                            broker.queues[qname])
+            pod.start()
+            pods[i] = pod
+
+        sim.process(boot())
+    sim.run(until=8.0)
+
+    orch = ClusterMigrationOrchestrator(api, HashConsumer)  # default policy
+    specs = [
+        PodMigrationSpec(pod=pods[0], queue="orders-0", target_node="node2"),
+        PodMigrationSpec(pod=pods[1], queue="orders-1", target_node="node2",
+                         policy=MigrationPolicy(precopy=True)),
+    ]
+    done = orch.migrate_fleet(specs)
+    sim.run(stop_when=done)
+    stop["flag"] = True
+    fleet = done.value
+    by_queue = {t.queue.name: r for r, t in zip(fleet.reports, fleet.targets)}
+    assert by_queue["orders-0"].precopy_rounds == 0
+    assert by_queue["orders-1"].precopy_rounds >= 1
