@@ -17,28 +17,38 @@ import tempfile
 from typing import Dict, List, Optional
 
 
+def _blob_factory():
+    from benchmarks.delta_precopy import BigStateConsumer
+    return BigStateConsumer()
+
+
 def run_fleet(repeats: int = 2, n_pods: int = 6,
               out_path: Optional[str] = None) -> List[Dict]:
     import numpy as np
 
-    from repro.core import run_fleet_experiment
+    from repro.core import MigrationPolicy, run_fleet_experiment
 
     scenarios = [
-        ("parallel/ms2m@c2", "parallel", "ms2m_individual", 2),
-        ("parallel/ms2m@c4", "parallel", "ms2m_individual", 4),
-        ("parallel/precopy@c4", "parallel", "ms2m_precopy", 4),
-        ("parallel/adaptive@c4", "parallel", "ms2m_adaptive", 4),
-        ("rolling/statefulset", "rolling", "ms2m_statefulset", 1),
-        ("drain/ms2m@c4", "drain", "ms2m_individual", 4),
+        ("parallel/ms2m@c2", "parallel", "ms2m_individual", 2, {}),
+        ("parallel/ms2m@c4", "parallel", "ms2m_individual", 4, {}),
+        ("parallel/precopy@c4", "parallel", "ms2m_precopy", 4, {}),
+        # the compressed checkpoint data path at fleet scale: multi-chunk
+        # blob states, delta rounds quantized (lossless exact flush)
+        ("parallel/precopy+int8@c4", "parallel", "ms2m_precopy", 4,
+         dict(policy=MigrationPolicy(compression="int8"),
+              worker_factory=_blob_factory, chunk_bytes=64 * 1024)),
+        ("parallel/adaptive@c4", "parallel", "ms2m_adaptive", 4, {}),
+        ("rolling/statefulset", "rolling", "ms2m_statefulset", 1, {}),
+        ("drain/ms2m@c4", "drain", "ms2m_individual", 4, {}),
     ]
     rows: List[Dict] = []
-    for name, mode, strategy, conc in scenarios:
+    for name, mode, strategy, conc, extra in scenarios:
         reps: List[Dict] = []
         for rep in range(repeats):
             with tempfile.TemporaryDirectory() as root:
                 fleet = run_fleet_experiment(
                     n_pods, strategy, 8.0, registry_root=root, mode=mode,
-                    max_concurrent=conc, seed=rep, num_nodes=4)
+                    max_concurrent=conc, seed=rep, num_nodes=4, **extra)
             reps.append(fleet.row())
         rows.append({
             "scenario": name,
@@ -50,6 +60,12 @@ def run_fleet(repeats: int = 2, n_pods: int = 6,
             "max_downtime_mean": round(
                 float(np.mean([r["max_downtime"] for r in reps])), 3),
             "peak_concurrency": max(r["peak_concurrency"] for r in reps),
+            "raw_bytes_total": int(np.mean(
+                [r["raw_bytes_total"] for r in reps])),
+            "wire_bytes_total": int(np.mean(
+                [r["wire_bytes_total"] for r in reps])),
+            "wire_reduction": round(float(np.mean(
+                [r["wire_reduction"] for r in reps])), 3),
             "all_verified": all(r["all_verified"] for r in reps),
         })
     if out_path:
@@ -64,6 +80,7 @@ def main():
         print(f"{r['scenario']}: {r['n_pods']} pods span={r['span_mean']}s "
               f"peak_conc={r['peak_concurrency']} "
               f"max_downtime={r['max_downtime_mean']}s "
+              f"wire_reduction=x{r['wire_reduction']} "
               f"verified={r['all_verified']}")
 
 

@@ -100,7 +100,8 @@ def main(argv=None) -> int:
         print(f"# beyond_paper done in {time.time()-t:.1f}s", file=sys.stderr)
 
     t = time.time()
-    from benchmarks.delta_precopy import run_delta_bytes, run_precopy_sweep
+    from benchmarks.delta_precopy import (run_codec_comparison,
+                                          run_delta_bytes, run_precopy_sweep)
     if not args.quick:  # real-JAX consumer: skipped in the smoke profile
         db = run_delta_bytes(out_path="results/delta_bytes.json")
         _csv("delta/bytes", 0.0,
@@ -113,6 +114,14 @@ def main(argv=None) -> int:
              r["downtime_mean"],
              f"replayed={r['replayed_mean']} "
              f"final_round_bytes={r['final_round_bytes_mean']}")
+    # codec comparison: the trainer workload is real-JAX, so the smoke
+    # profile runs the blob workload only
+    for r in run_codec_comparison(include_trainer=not args.quick,
+                                  out_path="results/delta_codecs.json"):
+        _csv(f"delta/codec_{r['workload']}_{r['codec']}", 0.0,
+             f"wire_reduction=x{r['wire_reduction']} "
+             f"delta_rounds=x{r['delta_wire_reduction']} "
+             f"verified={r['state_verified']}")
     print(f"# delta_precopy done in {time.time()-t:.1f}s", file=sys.stderr)
 
     t = time.time()

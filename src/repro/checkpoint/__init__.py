@@ -4,3 +4,11 @@ from repro.checkpoint.registry import (  # noqa: F401
     PushReport,
 )
 from repro.checkpoint.checkpointer import Checkpointer  # noqa: F401
+from repro.checkpoint.codecs import (  # noqa: F401
+    COMPRESSION_CHOICES,
+    DeltaCodec,
+    get_codec,
+    resolve_compression,
+    validate_compression,
+)
+from repro.checkpoint.fingerprint import leaf_fingerprints  # noqa: F401

@@ -1,0 +1,42 @@
+"""Checkpoint-side adapter for device-side chunk fingerprinting.
+
+The registry asks for one fingerprint per raw-byte chunk of a leaf; the
+heavy lifting (bit reinterpretation + the fused weighted-reduction pass)
+happens in ``repro.kernels`` — Pallas on TPU, the blockwise jnp lowering on
+CPU — so a JAX-resident leaf is fingerprinted without ever serializing it
+to host memory.  The adapter only normalizes leaves (python scalars,
+zero-size arrays, unsupported chunk grids) and returns host numpy for the
+manifest.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+import jax
+
+from repro.kernels.fingerprint import FP_WORDS, LANES
+
+
+def supports_chunk_bytes(chunk_bytes: int) -> bool:
+    """The kernel's lane layout needs chunks on a 512-byte word grid."""
+    return chunk_bytes >= 4 * LANES and chunk_bytes % (4 * LANES) == 0
+
+
+def leaf_fingerprints(leaf, chunk_bytes: int) -> Optional[np.ndarray]:
+    """-> ``[n_chunks, FP_WORDS]`` uint32 fingerprints of the leaf's raw
+    bytes on the registry's chunk grid, or None when the grid is
+    unsupported (the registry then falls back to host hashing)."""
+    from repro.kernels import ops
+
+    if not supports_chunk_bytes(chunk_bytes):
+        return None
+    if not isinstance(leaf, jax.Array):
+        leaf = np.asarray(leaf)
+        if (leaf.dtype == object or leaf.dtype.kind == "c"
+                or leaf.dtype.itemsize not in (1, 2, 4, 8)):
+            return None
+    if leaf.size == 0:
+        return np.zeros((0, FP_WORDS), np.uint32)
+    return np.asarray(ops.chunk_fingerprint(leaf, chunk_bytes))

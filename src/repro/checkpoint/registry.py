@@ -4,58 +4,91 @@ The paper checkpoints containers with CRIU, builds OCI images with Buildah
 and pushes them to an artifact registry, decoupling source and target nodes.
 Our unit of state is a well-typed pytree, so the "image" is:
 
-  * chunks: the leaf bytes, split into fixed-size segments, each stored
-    once under its sha256 (content addressing = layer dedup: pushing a
+  * chunks: the leaf raw bytes, split into fixed-size segments; each
+    stored segment sits under the sha256 of its *stored* (possibly
+    codec-encoded) bytes (content addressing = layer dedup: pushing a
     serving replica's image re-uploads *only* the KV-cache chunks — the
     weight chunks are already in the registry, exactly like a container
     image's cached base layers, cf. Ma et al. [12]).
-  * manifest: pickled treedefs + per-leaf chunk lists, itself stored by
-    hash; the image id is the manifest hash (immutable, verifiable —
-    the "forensic" property).
+  * manifest: pickled treedefs + per-leaf dtype/shape + per-chunk
+    ``{key, enc, wire, raw}`` entries, itself stored by hash; the image id
+    is the manifest hash (immutable, verifiable — the "forensic"
+    property).
   * delta manifests: ``push_delta`` references a *parent* image id; the
     wire cost of the push is only the chunks absent from the parent
     (content addressing gives chunk-level diffing for free), which is
     what makes iterative pre-copy rounds cheap — each round uploads the
     dirty set since the previous checkpoint, not the whole state.
 
-Every push/pull returns a byte report; the cluster runtime charges
-virtual-clock transfer time from those bytes.  Pulls can be told which
-chunks the puller already holds (``have_chunks``) so a node that
-prefetched the parent image pays only for the delta.
+Two data-path optimizations ride on the delta manifests:
+
+  * device-side fingerprints — every leaf is reduced to one 128-bit
+    fingerprint per chunk *on device* (``repro.kernels.ops
+    .chunk_fingerprint``; Pallas on TPU, blockwise jnp on CPU) and the
+    fingerprints are recorded in the manifest.  A delta push compares
+    them against the parent's: chunks with equal fingerprints reuse the
+    parent's chunk entry without being serialized, encoded or sha-hashed
+    on host — dirty detection costs a device reduction plus a tiny host
+    compare instead of a full host re-hash of every leaf per round.
+  * delta codecs — dirty chunks are run through a per-leaf codec
+    (``repro.checkpoint.codecs``: ``none`` / ``xor_rle`` / ``int8``)
+    before storage, so the wire carries the *encoded* bytes.  Parent-
+    relative codecs record the image (``pim``) they encoded against;
+    pulls invert the codec chain back to raw bytes.
+
+Every push/pull returns a byte report distinguishing raw payload bytes
+from wire (encoded) bytes; the cluster runtime charges virtual-clock
+transfer time from the wire bytes plus a configurable codec/fingerprint
+compute cost.  Pulls can be told which chunks the puller already holds
+(``have_chunks``) so a node that prefetched the parent image pays only
+for the delta.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
-import io
 import json
 import os
 import pickle
 import threading
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
 import jax
 
+from repro.checkpoint import codecs as _codecs
+from repro.checkpoint.fingerprint import leaf_fingerprints
+
 CHUNK_BYTES = 4 * 1024 * 1024
+
+CompressionSpec = Union[str, Dict[str, str]]
 
 
 @dataclasses.dataclass
 class PushReport:
     image_id: str
-    total_bytes: int
-    written_bytes: int  # after dedup (new to the registry store)
-    deduped_bytes: int
+    total_bytes: int    # raw payload bytes across all chunks
+    written_bytes: int  # encoded bytes newly written to the store (dedup'd)
+    deduped_bytes: int  # raw bytes the store already held (saved vs cold)
     num_chunks: int
     parent_id: Optional[str] = None
-    # wire bytes relative to the parent image (== total_bytes for a full
-    # push): what a client holding the parent must upload
+    # raw bytes of chunks absent from the parent image (== total_bytes for
+    # a full push): the dirty set a client holding the parent must move
     delta_bytes: int = -1
+    # encoded bytes of that dirty set: what actually crosses the wire
+    wire_bytes: int = -1
+    codec: str = "none"          # the compression spec this push ran with
+    lossy: bool = False          # any chunk used a lossy codec
+    enc_raw_bytes: int = 0       # raw bytes fed through a codec encoder
+    fp_bytes: int = 0            # raw bytes fingerprinted on device
+    fp_clean_chunks: int = 0     # chunks proven clean by fingerprint alone
 
     def __post_init__(self):
         if self.delta_bytes < 0:
             self.delta_bytes = self.total_bytes
+        if self.wire_bytes < 0:
+            self.wire_bytes = self.delta_bytes
 
 
 class ChunkStore:
@@ -91,14 +124,6 @@ class ChunkStore:
             return f.read()
 
 
-def _leaf_to_bytes(x) -> bytes:
-    """Self-describing raw encoding (supports ml_dtypes like bfloat16)."""
-    arr = np.asarray(x)
-    header = json.dumps({"dtype": arr.dtype.name,
-                         "shape": list(arr.shape)}).encode()
-    return len(header).to_bytes(4, "little") + header + arr.tobytes()
-
-
 def _resolve_dtype(name: str):
     try:
         return np.dtype(name)
@@ -107,11 +132,18 @@ def _resolve_dtype(name: str):
         return np.dtype(getattr(ml_dtypes, name))
 
 
-def _leaf_from_bytes(data: bytes):
-    n = int.from_bytes(data[:4], "little")
-    meta = json.loads(data[4: 4 + n])
-    arr = np.frombuffer(data[4 + n:], dtype=_resolve_dtype(meta["dtype"]))
-    return arr.reshape(meta["shape"]).copy()
+def _leaf_meta(leaf) -> Tuple[str, Tuple[int, ...], int]:
+    """(dtype name, shape, nbytes) without forcing a device->host copy."""
+    if isinstance(leaf, (jax.Array, np.ndarray)):
+        return leaf.dtype.name, tuple(leaf.shape), int(leaf.nbytes)
+    arr = np.asarray(leaf)
+    return arr.dtype.name, tuple(arr.shape), int(arr.nbytes)
+
+
+def _leaf_raw(leaf) -> bytes:
+    """C-order raw bytes of the leaf (device->host transfer happens here,
+    and only for leaves with at least one dirty chunk)."""
+    return np.asarray(leaf).tobytes()
 
 
 class Registry:
@@ -127,31 +159,118 @@ class Registry:
         self._lock = threading.Lock()
 
     # -- push ---------------------------------------------------------------
+    def _parent_leaf(self, parent_manifest: Optional[dict], name: str,
+                     i: int, dtype: str, shape, nbytes: int
+                     ) -> Optional[dict]:
+        """The parent's matching leaf entry, iff its chunk grid is
+        compatible (same chunk_bytes + dtype/shape/nbytes => same chunk
+        count/sizes)."""
+        if (parent_manifest is None
+                or parent_manifest.get("chunk_bytes") != self.chunk_bytes):
+            return None
+        spec = parent_manifest["trees"].get(name)
+        if spec is None or i >= len(spec["leaves"]):
+            return None
+        ent = spec["leaves"][i]
+        if (ent["dtype"] != dtype or tuple(ent["shape"]) != tuple(shape)
+                or ent["nbytes"] != nbytes):
+            return None
+        return ent
+
     def _push(self, trees: Dict[str, Any], meta: Optional[dict],
-              tag: Optional[str], parent: Optional[str]) -> PushReport:
+              tag: Optional[str], parent: Optional[str], *,
+              compression: CompressionSpec = "none",
+              lossy_ok: bool = False,
+              fingerprints: bool = True) -> PushReport:
+        _codecs.validate_compression(compression)
+        parent_manifest = self._manifest(parent) if parent else None
         parent_keys = (set(self.image_chunks(parent))
                        if parent is not None else set())
-        total = written = delta = n_chunks = 0
-        manifest: Dict[str, Any] = {"trees": {}, "meta": meta or {},
-                                    "parent": parent,
-                                    "chunk_bytes": self.chunk_bytes}
+        cb = self.chunk_bytes
+        total = written = written_raw = delta = wire = n_chunks = 0
+        enc_raw = fp_bytes = fp_clean = 0
+        parent_raw_memo: Dict[tuple, bytes] = {}
+        lossy = False
+        manifest: Dict[str, Any] = {"version": 2, "trees": {},
+                                    "meta": meta or {}, "parent": parent,
+                                    "chunk_bytes": cb}
         for name, tree in trees.items():
             leaves, treedef = jax.tree.flatten(tree)
             leaf_entries: List[dict] = []
-            for leaf in leaves:
-                data = _leaf_to_bytes(leaf)
-                chunks = []
-                for off in range(0, len(data), self.chunk_bytes):
-                    seg = data[off: off + self.chunk_bytes]
-                    key, new = self.store.put(seg)
-                    chunks.append(key)
-                    total += len(seg)
-                    written += len(seg) if new else 0
-                    if key not in parent_keys:
-                        delta += len(seg)
-                        parent_keys.add(key)  # count shared chunks once
-                    n_chunks += 1
-                leaf_entries.append({"chunks": chunks, "nbytes": len(data)})
+            for i, leaf in enumerate(leaves):
+                dtype, shape, nbytes = _leaf_meta(leaf)
+                n = -(-nbytes // cb) if nbytes else 0
+                pleaf = self._parent_leaf(parent_manifest, name, i,
+                                          dtype, shape, nbytes)
+                fps = leaf_fingerprints(leaf, cb) if fingerprints else None
+                if fps is not None:
+                    fp_bytes += nbytes
+                fp_list = (None if fps is None
+                           else [[int(w) for w in row] for row in fps])
+                pfps = pleaf.get("fps") if pleaf is not None else None
+                clean = [False] * n
+                if fp_list is not None and pfps is not None and len(pfps) == n:
+                    # a null parent fingerprint marks a lossily-encoded
+                    # chunk (its decode differs from what was pushed):
+                    # never treat it as clean
+                    clean = [fp_list[c] is not None
+                             and fp_list[c] == pfps[c] for c in range(n)]
+
+                total += nbytes
+                n_chunks += n
+                chunks: List[dict] = []
+                if all(clean) and n:
+                    # device fingerprints prove the whole leaf untouched:
+                    # reuse the parent's entries without serializing it
+                    fp_clean += n
+                    chunks = [dict(ch) for ch in pleaf["chunks"]]
+                else:
+                    data = _leaf_raw(leaf) if nbytes else b""
+                    codec_name = _codecs.resolve_compression(
+                        compression, name, _resolve_dtype(dtype),
+                        pleaf is not None, lossy_ok, chunk_bytes=cb)
+                    codec = _codecs.get_codec(codec_name)
+                    for c in range(n):
+                        seg = data[c * cb: (c + 1) * cb]
+                        if clean[c]:
+                            fp_clean += 1
+                            chunks.append(dict(pleaf["chunks"][c]))
+                            continue
+                        entry = {"raw": len(seg)}
+                        if codec_name == "none":
+                            blob = seg
+                        else:
+                            parent_raw = self._chunk_raw(
+                                parent, name, i, c, memo=parent_raw_memo)
+                            blob = codec.encode(seg, parent_raw,
+                                                _resolve_dtype(dtype))
+                            enc_raw += len(seg)
+                            if len(blob) >= len(seg):
+                                blob = seg  # incompressible: store raw
+                            else:
+                                entry["enc"] = codec_name
+                                entry["pim"] = parent
+                                if not codec.lossless:
+                                    lossy = True
+                                    # the image decodes to the *lossy*
+                                    # reconstruction: the pushed leaf's
+                                    # fingerprint would misrepresent it
+                                    if fp_list is not None:
+                                        fp_list[c] = None
+                        key, new = self.store.put(blob)
+                        entry["key"] = key
+                        entry["wire"] = len(blob)
+                        if new:
+                            written += len(blob)
+                            written_raw += len(seg)
+                        if key not in parent_keys:
+                            delta += len(seg)
+                            wire += len(blob)
+                            parent_keys.add(key)  # count shared chunks once
+                        chunks.append(entry)
+                leaf_entries.append({"dtype": dtype, "shape": list(shape),
+                                     "nbytes": nbytes, "chunks": chunks,
+                                     "fps": fp_list})
             manifest["trees"][name] = {
                 "treedef": pickle.dumps(treedef).hex(),
                 "leaves": leaf_entries,
@@ -166,22 +285,44 @@ class Registry:
         if tag:
             with self._lock:
                 self._tags[tag] = image_id
-        return PushReport(image_id, total, written, total - written, n_chunks,
+        spec_str = (json.dumps(compression, sort_keys=True)
+                    if isinstance(compression, dict) else compression)
+        # dedup savings stay in RAW units (total is raw; written is
+        # encoded): raw bytes whose chunks the store already held
+        return PushReport(image_id, total, written, total - written_raw,
+                          n_chunks,
                           parent_id=parent,
-                          delta_bytes=delta if parent is not None else total)
+                          delta_bytes=delta if parent is not None else total,
+                          wire_bytes=wire if parent is not None else total,
+                          codec=spec_str, lossy=lossy, enc_raw_bytes=enc_raw,
+                          fp_bytes=fp_bytes, fp_clean_chunks=fp_clean)
 
     def push_image(self, trees: Dict[str, Any], meta: Optional[dict] = None,
-                   tag: Optional[str] = None) -> PushReport:
-        return self._push(trees, meta, tag, parent=None)
+                   tag: Optional[str] = None, *,
+                   fingerprints: bool = True) -> PushReport:
+        return self._push(trees, meta, tag, parent=None,
+                          fingerprints=fingerprints)
 
     def push_delta(self, trees: Dict[str, Any], parent_image_id: str,
                    meta: Optional[dict] = None,
-                   tag: Optional[str] = None) -> PushReport:
-        """Delta push: the manifest still lists *every* chunk (a delta image
-        is self-contained and immutable), but the wire cost — and the
-        report's ``delta_bytes`` — covers only chunks absent from the
-        parent image."""
-        return self._push(trees, meta, tag, parent=parent_image_id)
+                   tag: Optional[str] = None, *,
+                   compression: CompressionSpec = "none",
+                   exact: bool = False,
+                   fingerprints: bool = True) -> PushReport:
+        """Delta push: the manifest still lists *every* chunk, but the wire
+        cost — and the report's ``delta_bytes``/``wire_bytes`` — covers
+        only chunks absent from the parent image.  ``compression`` selects
+        the per-leaf delta codec; ``exact=True`` restricts the choice to
+        lossless codecs (the pre-copy engine's final flush).
+
+        Immutability caveat: with ``compression="none"`` the image is
+        fully self-contained, but a codec-encoded chunk decodes against
+        the image it was encoded against (its ``pim`` entry) — the delta
+        image pins its parent lineage, so GC/export must keep the chain
+        reachable (``delta_chain``)."""
+        return self._push(trees, meta, tag, parent=parent_image_id,
+                          compression=compression, lossy_ok=not exact,
+                          fingerprints=fingerprints)
 
     # -- pull ---------------------------------------------------------------
     def _manifest(self, image_id: str) -> dict:
@@ -193,53 +334,86 @@ class Registry:
         path = os.path.join(self.root, "manifests", image_id + ".json")
         with open(path, "rb") as f:
             manifest = json.loads(f.read())
+        if manifest.get("version") != 2:
+            raise ValueError(
+                f"image {image_id} has manifest version "
+                f"{manifest.get('version', 1)}; this registry reads "
+                f"version 2 (re-push the state with the current code)")
         with self._lock:
             self._manifests[image_id] = manifest
         return manifest
 
+    def _chunk_raw(self, image_id: str, name: str, li: int, ci: int,
+                   charge: Optional[Callable[[str, int], None]] = None,
+                   memo: Optional[Dict[tuple, bytes]] = None) -> bytes:
+        """Raw bytes of one chunk, inverting the codec chain (an encoded
+        chunk decodes against the image it was encoded against, ``pim``).
+        ``charge`` is called once per touched chunk for wire accounting;
+        ``memo`` (scoped to one push/pull) keeps repeated walks over a
+        shared parent chain linear instead of O(chain^2)."""
+        mkey = (image_id, name, li, ci)
+        if memo is not None and mkey in memo:
+            return memo[mkey]
+        ent = self._manifest(image_id)["trees"][name]["leaves"][li]
+        dtype, ent = ent["dtype"], ent["chunks"][ci]
+        blob = self.store.get(ent["key"])
+        if charge is not None:
+            charge(ent["key"], ent["wire"])
+        enc = ent.get("enc", "none")
+        if enc == "none":
+            raw = blob
+        else:
+            parent_raw = self._chunk_raw(ent["pim"], name, li, ci, charge,
+                                         memo)
+            raw = _codecs.get_codec(enc).decode(blob, parent_raw,
+                                                _resolve_dtype(dtype))
+        if memo is not None:
+            memo[mkey] = raw
+        return raw
+
     def pull_image(self, image_id: str,
                    have_chunks: Optional[set] = None
                    ) -> Tuple[Dict[str, Any], int]:
-        """-> (trees, bytes_pulled).
+        """-> (trees, wire_bytes_pulled).
 
         With ``have_chunks`` (the puller's local chunk cache), only missing
         chunks are charged.  Accounting is per distinct chunk — each chunk
         crosses the wire at most once per pull regardless of how many
-        leaves reference it — so a cold pull and a pull with an empty cache
-        charge identically, and a node that prefetched the parent image
-        pays only for the delta."""
+        leaves reference it — and covers the decode chain too: a delta
+        chunk whose codec parents were never prefetched pays for them."""
         manifest = self._manifest(image_id)
-        chunk_bytes = manifest.get("chunk_bytes") or self.chunk_bytes
         trees = {}
         pulled = 0
         seen = set(have_chunks or ())
+        memo: Dict[tuple, bytes] = {}
+
+        def charge(key: str, wire: int):
+            nonlocal pulled
+            if key not in seen:
+                pulled += wire
+                seen.add(key)
+
         for name, spec in manifest["trees"].items():
             treedef = pickle.loads(bytes.fromhex(spec["treedef"]))
             leaves = []
-            for entry in spec["leaves"]:
-                data = b"".join(self.store.get(k) for k in entry["chunks"])
-                off = 0
-                for k in entry["chunks"]:
-                    size = min(chunk_bytes, entry["nbytes"] - off)
-                    if k not in seen:
-                        pulled += size
-                        seen.add(k)
-                    off += size
-                leaves.append(_leaf_from_bytes(data))
+            for li, entry in enumerate(spec["leaves"]):
+                data = b"".join(
+                    self._chunk_raw(image_id, name, li, ci, charge, memo)
+                    for ci in range(len(entry["chunks"])))
+                arr = np.frombuffer(data, dtype=_resolve_dtype(entry["dtype"]))
+                leaves.append(arr.reshape(entry["shape"]).copy())
             trees[name] = jax.tree.unflatten(treedef, leaves)
         return trees, pulled
 
     def image_chunks(self, image_id: str) -> Dict[str, int]:
-        """Chunk key -> byte size for every chunk of the image."""
+        """Chunk key -> stored (wire) byte size for every chunk of the
+        image."""
         manifest = self._manifest(image_id)
-        chunk_bytes = manifest.get("chunk_bytes") or self.chunk_bytes
         out: Dict[str, int] = {}
         for spec in manifest["trees"].values():
             for entry in spec["leaves"]:
-                off = 0
-                for k in entry["chunks"]:
-                    out[k] = min(chunk_bytes, entry["nbytes"] - off)
-                    off += chunk_bytes
+                for ch in entry["chunks"]:
+                    out[ch["key"]] = ch["wire"]
         return out
 
     def image_parent(self, image_id: str) -> Optional[str]:

@@ -40,6 +40,12 @@ class TimingConstants:
     push_base_s: float = 6.0           # registry round-trips
     pull_base_s: float = 5.0
     registry_bw_Bps: float = 200e6     # artifact registry bandwidth
+    # checkpoint data-path compute: wire time is charged on *encoded*
+    # bytes, so the codec's own cost must be charged too (raw bytes fed
+    # through a delta-codec encoder), as must the device-side fingerprint
+    # pass (a streaming reduction, so near memory bandwidth)
+    codec_Bps: float = 1.2e9
+    fingerprint_Bps: float = 24e9
     restore_s: float = 13.0            # CRIU restore into a fresh container
     pod_create_s: float = 3.0          # scheduling + sandbox start
     pod_delete_s: float = 2.0          # SIGTERM + teardown
@@ -269,6 +275,12 @@ class APIServer:
         self._log("checkpointed", pod=pod.name, last_msg_id=marker)
         return {"state": state, "last_msg_id": marker}
 
+    def _data_path_cost_s(self, report) -> float:
+        """Codec encode + device fingerprint compute for one push."""
+        t = self.timings
+        return (report.enc_raw_bytes / t.codec_Bps
+                + report.fp_bytes / t.fingerprint_Bps)
+
     def build_and_push_image(self, checkpoint: dict, tag: str) -> Generator:
         """Image Manager: OCI assembly + registry push (real bytes)."""
         t = self.timings
@@ -278,26 +290,32 @@ class APIServer:
             meta={"last_msg_id": int(checkpoint["last_msg_id"]), "tag": tag},
             tag=tag,
         )
-        yield t.push_base_s + report.written_bytes / t.registry_bw_Bps
+        yield (t.push_base_s + report.written_bytes / t.registry_bw_Bps
+               + self._data_path_cost_s(report))
         self._log("image_pushed", tag=tag, image_id=report.image_id,
                   written=report.written_bytes, deduped=report.deduped_bytes)
         return report
 
     def push_delta_image(self, checkpoint: dict, tag: str,
-                         parent_image_id: str) -> Generator:
+                         parent_image_id: str, *,
+                         compression="none", exact: bool = False) -> Generator:
         """Pre-copy round: delta layer vs the parent image — the wire only
-        carries chunks the registry doesn't already hold."""
+        carries *encoded* chunks the registry doesn't already hold.
+        ``compression`` selects the per-leaf delta codec; ``exact=True``
+        restricts it to lossless codecs (the pre-copy final flush)."""
         t = self.timings
         yield t.delta_build_s
         report = self.registry.push_delta(
             {"state": checkpoint["state"]}, parent_image_id,
             meta={"last_msg_id": int(checkpoint["last_msg_id"]), "tag": tag},
-            tag=tag,
+            tag=tag, compression=compression, exact=exact,
         )
-        yield t.push_base_s + report.written_bytes / t.registry_bw_Bps
+        yield (t.push_base_s + report.written_bytes / t.registry_bw_Bps
+               + self._data_path_cost_s(report))
         self._log("delta_pushed", tag=tag, image_id=report.image_id,
                   parent=parent_image_id, delta=report.delta_bytes,
-                  written=report.written_bytes)
+                  wire=report.wire_bytes, written=report.written_bytes,
+                  codec=report.codec, lossy=report.lossy)
         return report
 
     def prefetch_image(self, node_name: str, image_id: str) -> Generator:

@@ -19,6 +19,7 @@ from repro.core.strategy import (  # noqa: F401
     available_strategies,
     get_strategy,
     register_strategy,
+    registry_entries,
 )
 from repro.core.orchestrator import (  # noqa: F401
     ClusterMigrationOrchestrator,

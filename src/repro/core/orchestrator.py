@@ -91,6 +91,21 @@ class FleetReport:
         return sum(r.downtime for r in self.reports)
 
     @property
+    def raw_bytes_total(self) -> int:
+        """Dirty bytes a codec-less transfer would have moved, fleet-wide."""
+        return sum(r.image_raw_bytes for r in self.reports)
+
+    @property
+    def wire_bytes_total(self) -> int:
+        """Encoded bytes the delta codecs actually put on the wire."""
+        return sum(r.image_wire_bytes for r in self.reports)
+
+    @property
+    def wire_reduction(self) -> float:
+        wire = self.wire_bytes_total
+        return self.raw_bytes_total / wire if wire > 0 else 1.0
+
+    @property
     def all_verified(self) -> Optional[bool]:
         """True/False once every report has been verified; None while any
         report is unverified (or the fleet is empty) — 'not checked' must
@@ -124,6 +139,9 @@ class FleetReport:
             "peak_concurrency": self.peak_concurrency,
             "max_downtime": round(self.max_downtime, 3),
             "total_downtime": round(self.total_downtime, 3),
+            "raw_bytes_total": self.raw_bytes_total,
+            "wire_bytes_total": self.wire_bytes_total,
+            "wire_reduction": round(self.wire_reduction, 3),
             "all_verified": self.all_verified,
             "strategies": sorted({r.strategy for r in self.reports}),
             "downtime_by_strategy": self.downtime_by_strategy(),

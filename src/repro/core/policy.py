@@ -38,6 +38,15 @@ class MigrationPolicy:
     precopy_converge_ratio: float = 0.9  # stop when dirty >= ratio * previous
     precopy_min_dirty: int = 0       # stop when a round dirties <= this many
 
+    # -- checkpoint data path -------------------------------------------------
+    # delta codec for pre-copy rounds: "none" | "xor_rle" | "int8" | "auto",
+    # or a {tree name: codec} dict (the registry resolves it against each
+    # leaf's dtype/parent; lossy codecs are followed by a lossless
+    # exact-flush push before cutover).  NOTE: the cluster migration path
+    # pushes one tree named "state", so a dict here must key on "state" —
+    # other keys only matter for direct multi-tree Registry pushes
+    compression: Any = "none"
+
     # -- adaptive strategy selection (ms2m_adaptive) --------------------------
     adaptive_rho_max: float = 0.9    # lam/mu above this => live sync unstable
     t_replay_max: float = 45.0       # replay bound when no CutoffController
@@ -45,6 +54,8 @@ class MigrationPolicy:
     def __post_init__(self):
         object.__setattr__(self, "replay_speedup",
                            max(1.0, self.replay_speedup))
+        from repro.checkpoint.codecs import validate_compression
+        validate_compression(self.compression)
 
     def evolve(self, **changes: Any) -> "MigrationPolicy":
         return dataclasses.replace(self, **changes)
@@ -94,11 +105,19 @@ class MigrationReport:
     image_id: str = ""
     image_written_bytes: int = 0
     image_deduped_bytes: int = 0
+    # raw-vs-wire accounting across every push of this migration: raw is
+    # the dirty bytes a codec-less transfer would move, wire is what the
+    # delta codecs actually put on the link
+    image_raw_bytes: int = 0
+    image_wire_bytes: int = 0
+    compression: str = "none"
     state_verified: Optional[bool] = None
-    # pre-copy telemetry: per-round wire bytes / dirty-message counts
+    # pre-copy telemetry: per-round raw/wire bytes / dirty-message counts
     # (index 0 = the initial full push)
     precopy_rounds: int = 0
     precopy_round_bytes: List[int] = dataclasses.field(default_factory=list)
+    precopy_round_wire_bytes: List[int] = dataclasses.field(
+        default_factory=list)
     precopy_round_dirty: List[int] = dataclasses.field(default_factory=list)
     # structured trace stream; ``phases`` below is derived from it
     events: List[MigrationEvent] = dataclasses.field(default_factory=list)
@@ -106,6 +125,13 @@ class MigrationReport:
     @property
     def migration_time(self) -> float:
         return self.t_end - self.t_start
+
+    @property
+    def wire_reduction(self) -> float:
+        """raw / wire bytes across all pushes (1.0 = no codec win)."""
+        if self.image_wire_bytes <= 0:
+            return 1.0
+        return self.image_raw_bytes / self.image_wire_bytes
 
     def emit(self, kind: str, t: float, **data: Any) -> MigrationEvent:
         ev = MigrationEvent(t=t, kind=kind, data=data)

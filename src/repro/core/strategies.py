@@ -60,6 +60,9 @@ from repro.core.strategy import (
 
 @register_strategy("stop_and_copy")
 class StopAndCopy(MigrationStrategy):
+    """Strategy 0 (Fig. 5): UMS-style stop-and-copy baseline — downtime
+    spans the whole checkpoint/push/pull/restore pipeline (~49 s)."""
+
     def run(self, ctx: MigrationContext) -> Generator:
         t = ctx.api.timings
         rep = ctx.report
@@ -90,7 +93,8 @@ class StopAndCopy(MigrationStrategy):
 
 @register_strategy("ms2m_individual")
 class MS2MIndividual(MigrationStrategy):
-    """Strategy 1: live sync, single-shot transfer (pre-copy by policy)."""
+    """Strategy 1 (Fig. 2): live sync via a mirrored secondary queue —
+    downtime is the short cutover only (pre-copy opt-in by policy)."""
 
     def use_precopy(self, ctx: MigrationContext) -> bool:
         return ctx.policy.precopy
@@ -147,7 +151,8 @@ class MS2MIndividual(MigrationStrategy):
 
 @register_strategy("ms2m_cutoff")
 class MS2MCutoff(MS2MIndividual):
-    """Strategy 2: live sync bounded by the Eq. 5 cutoff deadline."""
+    """Strategy 2 (Fig. 3, Eq. 5): live sync bounded by the Threshold-Based
+    Cutoff — replay capped at T_replay_max by construction."""
 
     wants_cutoff = True
 
@@ -158,7 +163,9 @@ class MS2MCutoff(MS2MIndividual):
 
 @register_strategy("ms2m_precopy")
 class MS2MPrecopy(MS2MIndividual):
-    """Strategy 4: the iterative delta pre-copy engine, always on."""
+    """Strategy 4 (beyond paper): iterative delta pre-copy always on —
+    full push once, then fingerprint-diffed, codec-compressed delta rounds
+    until the dirty set converges; the replay log is one round's traffic."""
 
     def use_precopy(self, ctx: MigrationContext) -> bool:
         return True
@@ -170,6 +177,10 @@ class MS2MPrecopy(MS2MIndividual):
 
 @register_strategy("ms2m_statefulset")
 class MS2MStatefulSet(MigrationStrategy):
+    """Strategy 3 (Fig. 4): sticky identity forces stop-before-create —
+    checkpoint+push live, stop source, release identity, restore, bounded
+    replay to the cutoff message id."""
+
     handles_identity = True
 
     def run(self, ctx: MigrationContext) -> Generator:
@@ -227,8 +238,10 @@ class MS2MStatefulSet(MigrationStrategy):
 
 @register_strategy("ms2m_adaptive")
 class MS2MAdaptive(MigrationStrategy):
-    """Picks ms2m_individual / ms2m_cutoff / ms2m_precopy at migrate time
-    from telemetry available to the Migration Manager:
+    """Strategy 5 (beyond paper): picks individual / cutoff / pre-copy at
+    migrate time from observed lam/mu and state-size telemetry.
+
+    The inputs are what the Migration Manager can already see:
 
       * lam/mu — the CutoffController's online estimates (or the arrival
         throughput observed on the primary queue when none is wired);

@@ -75,6 +75,25 @@ def available_strategies() -> List[str]:
     return sorted(_REGISTRY)
 
 
+def registry_entries() -> List[Dict[str, Any]]:
+    """One row per registered strategy: name, control-plane flags and the
+    docstring's first paragraph.  This is the single source for the CLI's
+    ``--list-strategies`` output and the README strategy table
+    (``tools/check_docs.py`` regenerates and diffs the table from it, so
+    the docs cannot drift from the code)."""
+    rows = []
+    for name in available_strategies():
+        cls = _REGISTRY[name]
+        doc = (cls.__doc__ or "").strip()
+        summary = " ".join(line.strip()
+                           for line in doc.split("\n\n")[0].splitlines())
+        rows.append({"name": name,
+                     "wants_cutoff": cls.wants_cutoff,
+                     "handles_identity": cls.handles_identity,
+                     "summary": summary})
+    return rows
+
+
 # ---------------------------------------------------------------------------
 # Pod-observation helpers (listener bookkeeping + wait conditions)
 # ---------------------------------------------------------------------------
@@ -158,6 +177,9 @@ class MigrationContext:
         self.identity = identity
         self.n = n
         self.report = MigrationReport(strategy_name, self.sim.now)
+        self.report.compression = (
+            policy.compression if isinstance(policy.compression, str)
+            else str(policy.compression))
         self.subs: List = []   # processed-event listeners, removed on cleanup
         self.secondary = None  # the mirror queue, once attached
 
@@ -222,6 +244,8 @@ class MigrationContext:
         rep.image_id = push.image_id
         rep.image_written_bytes = push.written_bytes
         rep.image_deduped_bytes = push.deduped_bytes
+        rep.image_raw_bytes += push.delta_bytes
+        rep.image_wire_bytes += push.wire_bytes
         self.phase("image_build_push", t0)
         return ckpt, push
 
@@ -332,11 +356,13 @@ class IterativePrecopyTransfer(TransferEngine):
         yield from api.prefetch_image(ctx.target_node, push.image_id)
         ctx.phase("precopy_prefetch", t0)
         rep.precopy_round_bytes.append(push.delta_bytes)
+        rep.precopy_round_wire_bytes.append(push.wire_bytes)
         rep.precopy_round_dirty.append(ckpt["last_msg_id"] - base)
         marker = ckpt["last_msg_id"]
         ctx.emit("precopy_round", round=0, bytes=push.delta_bytes,
-                 dirty=ckpt["last_msg_id"] - base)
+                 wire=push.wire_bytes, dirty=ckpt["last_msg_id"] - base)
 
+        lossy_lineage = False
         prev_dirty: Optional[int] = None
         while rep.precopy_rounds < pol.precopy_max_rounds:
             # phases stay comparable across strategies: dumps are always
@@ -353,22 +379,54 @@ class IterativePrecopyTransfer(TransferEngine):
                 break
             t0 = sim.now
             delta = yield from api.push_delta_image(
-                ckpt, f"{tag}-r{rep.precopy_rounds + 1}", push.image_id)
+                ckpt, f"{tag}-r{rep.precopy_rounds + 1}", push.image_id,
+                compression=pol.compression)
             yield from api.prefetch_image(ctx.target_node, delta.image_id)
             ctx.phase("precopy_delta", t0)
             push = delta
             marker = ckpt["last_msg_id"]
+            lossy_lineage = lossy_lineage or delta.lossy
             rep.precopy_rounds += 1
             rep.precopy_round_bytes.append(delta.delta_bytes)
+            rep.precopy_round_wire_bytes.append(delta.wire_bytes)
             rep.precopy_round_dirty.append(dirty)
             rep.image_written_bytes += delta.written_bytes
             rep.image_deduped_bytes += delta.deduped_bytes
+            rep.image_raw_bytes += delta.delta_bytes
+            rep.image_wire_bytes += delta.wire_bytes
             ctx.emit("precopy_round", round=rep.precopy_rounds,
-                     bytes=delta.delta_bytes, dirty=dirty)
+                     bytes=delta.delta_bytes, wire=delta.wire_bytes,
+                     dirty=dirty)
             if (prev_dirty is not None
                     and dirty >= prev_dirty * pol.precopy_converge_ratio):
                 break  # dirty set stopped shrinking: steady state reached
             prev_dirty = dirty
+        if lossy_lineage:
+            # lossy codec rounds warm the wire cheaply, but the image that
+            # is actually restored at cutover must decode bit-exactly:
+            # flush the residual (truth minus the receiver's lossy
+            # reconstruction) with lossless codecs only
+            t0 = sim.now
+            flush = yield from api.push_delta_image(
+                ckpt, f"{tag}-exact", push.image_id,
+                compression=pol.compression, exact=True)
+            yield from api.prefetch_image(ctx.target_node, flush.image_id)
+            ctx.phase("precopy_exact_flush", t0)
+            push = flush
+            # the flush ships the LAST dump, which (with precopy_min_dirty
+            # > 0) may be ahead of the last pushed round: the marker must
+            # describe the image actually restored
+            marker = ckpt["last_msg_id"]
+            rep.precopy_rounds += 1
+            rep.precopy_round_bytes.append(flush.delta_bytes)
+            rep.precopy_round_wire_bytes.append(flush.wire_bytes)
+            rep.precopy_round_dirty.append(0)
+            rep.image_written_bytes += flush.written_bytes
+            rep.image_deduped_bytes += flush.deduped_bytes
+            rep.image_raw_bytes += flush.delta_bytes
+            rep.image_wire_bytes += flush.wire_bytes
+            ctx.emit("precopy_exact_flush", bytes=flush.delta_bytes,
+                     wire=flush.wire_bytes)
         rep.checkpoint_marker = marker
         rep.image_id = push.image_id
         return push

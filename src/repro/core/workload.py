@@ -92,8 +92,14 @@ class ExperimentResult:
             "phases": {k: round(v, 3) for k, v in self.report.phases.items()},
             "image_written_bytes": self.report.image_written_bytes,
             "image_deduped_bytes": self.report.image_deduped_bytes,
+            "image_raw_bytes": self.report.image_raw_bytes,
+            "image_wire_bytes": self.report.image_wire_bytes,
+            "wire_reduction": round(self.report.wire_reduction, 3),
+            "compression": self.report.compression,
             "precopy_rounds": self.report.precopy_rounds,
             "precopy_round_bytes": list(self.report.precopy_round_bytes),
+            "precopy_round_wire_bytes":
+                list(self.report.precopy_round_wire_bytes),
             "precopy_round_dirty": list(self.report.precopy_round_dirty),
         }
 

@@ -20,6 +20,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import (CompilerParams as _CompilerParams,
+                                         MemorySpace as _MemorySpace)
+
 from repro.kernels.ref import NEG_INF
 
 
@@ -90,7 +93,7 @@ def decode_attention(q, k_cache, v_cache, q_pos, k_pos, *, block_k: int = 512,
         ),
         grid=(B, nk),
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),
+            pl.BlockSpec(memory_space=_MemorySpace.SMEM),
             pl.BlockSpec((1, H, D), lambda b, ik: (b, 0, 0)),
             pl.BlockSpec((1, block_k, Hkv, D), lambda b, ik: (b, ik, 0, 0)),
             pl.BlockSpec((1, block_k, Hkv, D), lambda b, ik: (b, ik, 0, 0)),
@@ -103,7 +106,7 @@ def decode_attention(q, k_cache, v_cache, q_pos, k_pos, *, block_k: int = 512,
             pltpu.VMEM((H, 128), jnp.float32),
             pltpu.VMEM((H, 128), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")
         ),
         interpret=interpret,

@@ -1,0 +1,177 @@
+"""Pallas TPU kernel for device-side chunk fingerprinting.
+
+The checkpoint registry content-addresses chunks by sha256 of their bytes,
+which forces every pre-copy round to serialize each leaf to host memory and
+re-hash it — even when almost nothing changed.  This kernel reduces each
+registry chunk to a 128-bit fingerprint *on device* in one fused streaming
+pass, so dirty detection between consecutive checkpoints becomes a
+fingerprint comparison: only chunks whose fingerprint changed are
+serialized, encoded and hashed on host.
+
+Construction (all arithmetic uint32, wrap-around mod 2^32, so the Pallas
+kernel, the blockwise jnp lowering and interpret mode agree bit-exactly):
+
+  * a leaf's raw bytes are reinterpreted as uint32 words and laid out as
+    ``[n_chunks, rows, 128]`` (128 = TPU lane width; rows stream through
+    VMEM in blocks);
+  * stage 1 (the kernel): per chunk, each lane accumulates a weighted sum
+    over rows, ``lane[j] = sum_r mix32(r) * w[r, j]`` — weights depend on
+    the intra-chunk row index only, so equal content yields equal
+    fingerprints regardless of chunk position (matching content
+    addressing), while any positional move *within* a chunk changes it;
+  * stage 2 (negligible, shared jnp): the 128 lanes collapse to
+    ``FP_WORDS`` words under four independently seeded weightings.
+
+A fingerprint collision would silently drop a dirty chunk, so the collapse
+keeps 4 x 32 bits; every migration path additionally verifies the restored
+state against a reference fold.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pallas_compat import CompilerParams as _CompilerParams
+
+LANES = 128          # TPU lane width; stage-1 fingerprint width
+FP_WORDS = 4         # final fingerprint words per chunk (4 x u32 = 128 bit)
+_GOLD = 0x9E3779B1   # 2^32 / golden ratio (Weyl constant)
+_COLLAPSE_SEEDS = (0x9E3779B1, 0x85EBCA77, 0xC2B2AE3D, 0x27D4EB2F)
+
+
+def _mix32(x):
+    """murmur3-style uint32 finalizer (elementwise, VPU-friendly)."""
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> jnp.uint32(15))
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def _row_weights(row0, block_rows: int):
+    """Per-row odd weights for absolute rows [row0, row0 + block_rows)."""
+    r = jax.lax.broadcasted_iota(jnp.uint32, (block_rows, LANES), 0)
+    r = r + jnp.uint32(1) + row0
+    return _mix32(r * jnp.uint32(_GOLD)) | jnp.uint32(1)
+
+
+def _fp_kernel(w_ref, out_ref, acc_ref, *, block_rows: int, n_blocks: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    row0 = (j * block_rows).astype(jnp.uint32)
+    weighted = w_ref[0] * _row_weights(row0, block_rows)
+    acc_ref[0] = acc_ref[0] + jnp.sum(weighted, axis=0, dtype=jnp.uint32)
+
+    @pl.when(j == n_blocks - 1)
+    def _done():
+        out_ref[...] = acc_ref[...]
+
+
+def _fit_rows(rows: int, want: int) -> int:
+    b = max(min(want, rows), 1)
+    while rows % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def fingerprint_lanes(words, *, block_rows: int = 256,
+                      interpret: bool = False):
+    """Stage 1 on Pallas: ``[C, R, 128]`` uint32 -> ``[C, 128]`` uint32."""
+    C, R, L = words.shape
+    assert L == LANES, words.shape
+    block_rows = _fit_rows(R, block_rows)
+    nb = R // block_rows
+    return pl.pallas_call(
+        functools.partial(_fp_kernel, block_rows=block_rows, n_blocks=nb),
+        grid=(C, nb),
+        in_specs=[pl.BlockSpec((1, block_rows, LANES),
+                               lambda c, j: (c, j, 0))],
+        out_specs=pl.BlockSpec((1, LANES), lambda c, j: (c, 0)),
+        out_shape=jax.ShapeDtypeStruct((C, LANES), jnp.uint32),
+        scratch_shapes=[pltpu.VMEM((1, LANES), jnp.uint32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(words)
+
+
+def fingerprint_lanes_ref(words):
+    """Stage 1, blockwise jnp formulation (CPU lowering of the kernel)."""
+    C, R, L = words.shape
+    assert L == LANES, words.shape
+    r = jnp.arange(R, dtype=jnp.uint32) + jnp.uint32(1)
+    w = _mix32(r * jnp.uint32(_GOLD)) | jnp.uint32(1)
+    return jnp.sum(words * w[None, :, None], axis=1, dtype=jnp.uint32)
+
+
+def collapse_lanes(lanes):
+    """Stage 2 (shared): ``[C, 128]`` uint32 -> ``[C, FP_WORDS]`` uint32."""
+    j = jnp.arange(LANES, dtype=jnp.uint32) + jnp.uint32(1)
+    w = jnp.stack([_mix32(j * jnp.uint32(s)) | jnp.uint32(1)
+                   for s in _COLLAPSE_SEEDS])          # [FP_WORDS, 128]
+    return jnp.sum(lanes[:, None, :] * w[None, :, :], axis=-1,
+                   dtype=jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# Byte-layout helpers: raw array bits -> the kernel's [C, R, 128] layout
+# ---------------------------------------------------------------------------
+
+def as_u32_words(x):
+    """Bit-reinterpret an array as a flat uint32 word vector (device-side
+    for jax arrays; zero-pads the tail to a 4-byte boundary)."""
+    import numpy as np
+
+    if not isinstance(x, jax.Array):
+        # numpy leaves go through a host byte view: jnp.asarray would
+        # silently downcast 64-bit dtypes (x64 disabled) and desync the
+        # fingerprint chunk grid from the registry's raw-byte grid
+        b = np.ascontiguousarray(np.asarray(x)).reshape(-1).view(np.uint8)
+        pad = (-b.size) % 4
+        if pad:
+            b = np.concatenate([b, np.zeros(pad, np.uint8)])
+        return jnp.asarray(b.view(np.uint32))
+    x = x.reshape(-1)
+    if x.dtype == jnp.bool_:
+        x = x.astype(jnp.uint8)
+    isz = x.dtype.itemsize
+    if isz == 4:
+        return jax.lax.bitcast_convert_type(x, jnp.uint32)
+    if isz == 8:
+        return jax.lax.bitcast_convert_type(x, jnp.uint32).reshape(-1)
+    group = 4 // isz  # 2-byte or 1-byte elements: group into one word
+    pad = (-x.size) % group
+    if pad:
+        x = jnp.pad(x, (0, pad))
+    narrow = jnp.uint16 if isz == 2 else jnp.uint8
+    x = jax.lax.bitcast_convert_type(x, narrow).reshape(-1, group)
+    return jax.lax.bitcast_convert_type(x, jnp.uint32)
+
+
+def chunked_words(x, chunk_bytes: int):
+    """-> uint32 words of ``x`` arranged ``[n_chunks, rows, 128]``, chunk
+    boundaries aligned with the registry's raw-byte chunk grid (requires
+    ``chunk_bytes`` to be a positive multiple of 512)."""
+    assert chunk_bytes >= 4 * LANES and chunk_bytes % (4 * LANES) == 0, \
+        chunk_bytes
+    words = as_u32_words(x)
+    wpc = chunk_bytes // 4
+    n = words.size
+    if n <= wpc:
+        # single-chunk leaf: pad only to the lane grid, not the full chunk
+        wpc = max(LANES, ((n + LANES - 1) // LANES) * LANES)
+    n_chunks = max(1, -(-n // wpc))
+    pad = n_chunks * wpc - n
+    if pad:
+        words = jnp.pad(words, (0, pad))
+    return words.reshape(n_chunks, wpc // LANES, LANES)

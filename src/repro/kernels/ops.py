@@ -108,6 +108,26 @@ def slstm_scan(x_i, x_f, x_z, x_o, r_i, r_f, r_z, r_o, state=None):
     return ref.naive_slstm(x_i, x_f, x_z, x_o, r_i, r_f, r_z, r_o, state)
 
 
+def chunk_fingerprint(x, chunk_bytes: int):
+    """Device-side chunk fingerprints of an array's raw bits.
+
+    Returns ``[n_chunks, 4]`` uint32, one 128-bit fingerprint per
+    ``chunk_bytes``-sized chunk of the flattened array (boundaries aligned
+    with the checkpoint registry's raw-byte chunk grid).  Pre-copy dirty
+    detection compares these instead of re-hashing full host buffers.
+    """
+    from repro.kernels import fingerprint as _fp
+
+    words = _fp.chunked_words(x, chunk_bytes)
+    if _on_tpu():
+        lanes = _fp.fingerprint_lanes(words)
+    elif _interpret_forced():
+        lanes = _fp.fingerprint_lanes(words, interpret=True)
+    else:
+        lanes = _fp.fingerprint_lanes_ref(words)
+    return _fp.collapse_lanes(lanes)
+
+
 def mlstm_scan(q, k, v, i_gate, f_gate, state=None):
     """mLSTM over a sequence.  TPU: chunkwise-parallel Pallas kernel (MXU
     matmuls); portable path: the stabilized lax.scan recurrence.

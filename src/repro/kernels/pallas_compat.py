@@ -1,0 +1,9 @@
+"""Pallas TPU API compatibility: jax renamed ``TPUCompilerParams`` ->
+``CompilerParams`` and ``TPUMemorySpace`` -> ``MemorySpace`` around 0.5;
+kernels import the names from here so both jax generations work."""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = (getattr(pltpu, "CompilerParams", None)
+                  or pltpu.TPUCompilerParams)
+MemorySpace = (getattr(pltpu, "MemorySpace", None)
+               or pltpu.TPUMemorySpace)

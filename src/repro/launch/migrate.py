@@ -24,8 +24,22 @@ from repro.core import (
     available_strategies,
     make_jax_worker_factory,
     measure_replay_speedup,
+    registry_entries,
     run_migration_experiment,
 )
+
+
+def list_strategies() -> int:
+    """Print every registered strategy with its control-plane flags and
+    docstring summary (operator-registered schemes included when imported
+    via ``--strategy-module``)."""
+    for row in registry_entries():
+        flags = [f for f, on in (("wants_cutoff", row["wants_cutoff"]),
+                                 ("handles_identity",
+                                  row["handles_identity"])) if on]
+        print(f"{row['name']:20s} [{', '.join(flags) or '-'}]")
+        print(f"    {row['summary']}")
+    return 0
 
 
 def main(argv=None) -> int:
@@ -42,6 +56,9 @@ def main(argv=None) -> int:
 
     ap = argparse.ArgumentParser(allow_abbrev=False)
     ap.add_argument("--strategy-module", default=None, help=module_help)
+    ap.add_argument("--list-strategies", action="store_true",
+                    help="print registry entries (name, wants_cutoff/"
+                         "handles_identity flags, docstring) and exit")
     ap.add_argument("--strategy", default="ms2m_individual",
                     choices=available_strategies())
     ap.add_argument("--rate", type=float, default=10.0)
@@ -55,9 +72,15 @@ def main(argv=None) -> int:
     ap.add_argument("--precopy", action="store_true",
                     help="iterative delta pre-copy transfer engine")
     ap.add_argument("--precopy-max-rounds", type=int, default=5)
+    ap.add_argument("--compression", default="none",
+                    choices=("none", "xor_rle", "int8", "auto"),
+                    help="delta codec for pre-copy rounds (wire bytes)")
     ap.add_argument("--events", action="store_true",
                     help="also print the structured MigrationEvent trace")
     args = ap.parse_args(argv)
+
+    if args.list_strategies:
+        return list_strategies()
 
     worker_factory = None
     speedup = 1.0
@@ -74,6 +97,7 @@ def main(argv=None) -> int:
         replay_speedup=speedup if args.batched_replay else 1.0,
         precopy=args.precopy,
         precopy_max_rounds=args.precopy_max_rounds,
+        compression=args.compression,
         t_replay_max=args.t_replay_max,
     )
     registry = args.registry or tempfile.mkdtemp(prefix="repro-registry-")

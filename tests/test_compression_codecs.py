@@ -1,0 +1,226 @@
+"""Delta codecs + registry edge cases: roundtrip bit-exactness per codec
+(including under full migration replay), empty/all-dirty deltas, and leaf
+sizes straddling chunk boundaries."""
+import numpy as np
+import pytest
+
+from repro.checkpoint import Registry
+from repro.checkpoint.codecs import get_codec
+from repro.core import HashConsumer, MigrationPolicy, run_migration_experiment
+
+CB = 64 * 1024
+
+
+# ---------------------------------------------------------------------------
+# codec unit level
+# ---------------------------------------------------------------------------
+
+def test_xor_rle_roundtrip_sparse_and_dense():
+    rng = np.random.default_rng(0)
+    parent = rng.standard_normal(CB // 4).astype(np.float32)
+    sparse = parent.copy()
+    sparse[100:300] += 1.0
+    dense = rng.standard_normal(CB // 4).astype(np.float32)
+    codec = get_codec("xor_rle")
+    for cur in (sparse, dense, parent):
+        raw, praw = cur.tobytes(), parent.tobytes()
+        blob = codec.encode(raw, praw, np.dtype(np.float32))
+        assert codec.decode(blob, praw, np.dtype(np.float32)) == raw
+        assert len(blob) <= len(raw) + 1  # raw-literal fallback bound
+    # near-static chunk collapses to a sliver
+    blob = codec.encode(sparse.tobytes(), parent.tobytes(),
+                        np.dtype(np.float32))
+    assert len(blob) < 0.05 * sparse.nbytes
+
+
+def test_int8_codec_quantizes_float_deltas():
+    rng = np.random.default_rng(1)
+    parent = rng.standard_normal(CB // 4).astype(np.float32)
+    cur = parent + rng.standard_normal(CB // 4).astype(np.float32) * 0.01
+    codec = get_codec("int8")
+    blob = codec.encode(cur.tobytes(), parent.tobytes(),
+                        np.dtype(np.float32))
+    assert len(blob) < 0.3 * cur.nbytes  # ~3.9x for f32
+    dec = np.frombuffer(
+        codec.decode(blob, parent.tobytes(), np.dtype(np.float32)),
+        np.float32)
+    assert not codec.lossless
+    np.testing.assert_allclose(dec, cur, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# registry edge cases
+# ---------------------------------------------------------------------------
+
+def test_empty_delta_zero_dirty_chunks(tmp_path):
+    reg = Registry(str(tmp_path), chunk_bytes=CB)
+    tree = {"a": np.arange(100_000, dtype=np.float32),
+            "b": np.arange(50_000, dtype=np.int64)}
+    full = reg.push_image({"state": tree})
+    for codec in ("none", "xor_rle", "int8"):
+        delta = reg.push_delta({"state": tree}, full.image_id,
+                               compression=codec)
+        assert delta.delta_bytes == 0
+        assert delta.wire_bytes == 0
+        assert delta.written_bytes == 0
+        assert not delta.lossy
+        # every chunk was proven clean by fingerprint, none re-hashed
+        assert delta.fp_clean_chunks == delta.num_chunks > 0
+        pulled, _ = reg.pull_image(delta.image_id)
+        for k, v in tree.items():
+            np.testing.assert_array_equal(pulled["state"][k], v)
+
+
+def test_all_dirty_delta(tmp_path):
+    reg = Registry(str(tmp_path), chunk_bytes=CB)
+    rng = np.random.default_rng(2)
+    t0 = {"a": rng.standard_normal(200_000).astype(np.float32)}
+    t1 = {"a": rng.standard_normal(200_000).astype(np.float32)}
+    full = reg.push_image({"state": t0})
+    delta = reg.push_delta({"state": t1}, full.image_id,
+                           compression="xor_rle")
+    assert delta.delta_bytes == t1["a"].nbytes  # every chunk dirty
+    assert delta.fp_clean_chunks == 0
+    # incompressible noise: the raw-literal fallback caps wire near raw
+    assert delta.wire_bytes <= delta.delta_bytes + delta.num_chunks
+    pulled, _ = reg.pull_image(delta.image_id)
+    np.testing.assert_array_equal(pulled["state"]["a"], t1["a"])
+
+
+@pytest.mark.parametrize("nbytes", [CB - 4, CB, CB + 4, 3 * CB - 100,
+                                    3 * CB + 8, 36])
+def test_leaf_sizes_straddling_chunk_boundaries(tmp_path, nbytes):
+    reg = Registry(str(tmp_path / str(nbytes)), chunk_bytes=CB)
+    n = nbytes // 4
+    base = np.arange(n, dtype=np.float32)
+    full = reg.push_image({"state": {"leaf": base}})
+    assert full.num_chunks == -(-nbytes // CB)
+    mut = base.copy()
+    mut[-1] += 1.0  # dirty the (possibly short) last chunk only
+    for codec in ("none", "xor_rle", "int8"):
+        delta = reg.push_delta({"state": {"leaf": mut}}, full.image_id,
+                               compression=codec)
+        assert delta.delta_bytes == nbytes - (full.num_chunks - 1) * CB
+        pulled, _ = reg.pull_image(delta.image_id)
+        got = pulled["state"]["leaf"]
+        if codec == "int8":
+            np.testing.assert_allclose(got, mut, atol=1e-2)
+        else:
+            np.testing.assert_array_equal(got, mut)
+
+
+def test_int8_falls_back_on_unaligned_chunk_grid(tmp_path):
+    """chunk_bytes not on the dtype's element grid would split a float
+    across chunks: int8 must fall back to a lossless byte codec instead
+    of crashing mid-push."""
+    reg = Registry(str(tmp_path), chunk_bytes=65537)
+    base = {"a": np.arange(128 * 1024, dtype=np.float32)}
+    full = reg.push_image({"state": base})
+    mut = {"a": base["a"] + 1.0}
+    delta = reg.push_delta({"state": mut}, full.image_id,
+                           compression="int8")
+    assert not delta.lossy  # xor_rle fallback, bit-exact
+    pulled, _ = reg.pull_image(delta.image_id)
+    np.testing.assert_array_equal(pulled["state"]["a"], mut["a"])
+
+
+def test_dict_compression_spec_keys_state_tree(tmp_path):
+    reg = Registry(str(tmp_path), chunk_bytes=CB)
+    base = {"a": np.arange(100_000, dtype=np.float32)}
+    full = reg.push_image({"state": base})
+    mut = {"a": base["a"] + 0.5}
+    hit = reg.push_delta({"state": mut}, full.image_id,
+                         compression={"state": "int8"})
+    miss = reg.push_delta({"state": mut}, full.image_id,
+                          compression={"params": "int8"})
+    assert hit.enc_raw_bytes > 0 and hit.lossy
+    assert miss.enc_raw_bytes == 0 and not miss.lossy
+
+
+def test_zero_size_leaf_roundtrip(tmp_path):
+    reg = Registry(str(tmp_path), chunk_bytes=CB)
+    tree = {"empty": np.zeros((0, 7), np.float32), "x": np.arange(10)}
+    push = reg.push_image({"state": tree})
+    pulled, _ = reg.pull_image(push.image_id)
+    assert pulled["state"]["empty"].shape == (0, 7)
+    np.testing.assert_array_equal(pulled["state"]["x"], tree["x"])
+
+
+def test_fingerprint_dirty_detection_matches_hashing(tmp_path):
+    """The fp fast path must pick the same dirty set (same chunk keys)
+    as full host hashing would."""
+    reg = Registry(str(tmp_path), chunk_bytes=CB)
+    base = {"a": np.zeros(5 * CB // 4, np.float32)}
+    full = reg.push_image({"state": base})
+    mut = {"a": base["a"].copy()}
+    mut["a"][2 * (CB // 4) + 5] = 3.0
+    with_fp = reg.push_delta({"state": mut}, full.image_id)
+    without = reg.push_delta({"state": mut}, full.image_id,
+                             fingerprints=False)
+    assert with_fp.fp_clean_chunks > 0 and without.fp_clean_chunks == 0
+    assert reg.image_chunks(with_fp.image_id) == \
+        reg.image_chunks(without.image_id)
+    assert with_fp.delta_bytes == without.delta_bytes
+
+
+# ---------------------------------------------------------------------------
+# migration level: bit-exact restores under replay, per codec
+# ---------------------------------------------------------------------------
+
+class StripedBlobConsumer(HashConsumer):
+    """Hash fold + a multi-chunk blob dirtied in thin stripes."""
+
+    def __init__(self):
+        super().__init__()
+        self.blob = np.zeros(1 << 19, dtype=np.float32)  # 2 MiB
+
+    def process(self, msg):
+        super().process(msg)
+        i = (msg.msg_id * 512) % (len(self.blob) - 512)
+        self.blob[i: i + 512] += 1.0
+
+    def state_tree(self):
+        tree = super().state_tree()
+        tree["blob"] = self.blob.copy()
+        return tree
+
+    def load_state(self, tree):
+        super().load_state(tree)
+        self.blob = np.array(tree["blob"], dtype=np.float32)
+
+    def state_equal(self, other, exact: bool = True):
+        return (super().state_equal(other, exact)
+                and np.array_equal(self.blob, other.blob))
+
+
+@pytest.mark.parametrize("codec", ["none", "xor_rle", "int8", "auto"])
+def test_precopy_migration_bit_exact_per_codec(tmp_path, codec):
+    r = run_migration_experiment(
+        "ms2m_precopy", 10.0, registry_root=str(tmp_path / "reg"),
+        seed=2, worker_factory=StripedBlobConsumer, chunk_bytes=CB,
+        policy=MigrationPolicy(compression=codec, precopy_max_rounds=3))
+    assert r.verified and r.report.state_verified
+    row = r.row()
+    assert row["compression"] == codec
+    assert row["image_wire_bytes"] <= row["image_raw_bytes"]
+    if codec == "int8":
+        # lossy rounds must be closed by the lossless exact flush
+        kinds = [e.kind for e in r.report.events]
+        assert "precopy_exact_flush" in kinds
+        assert r.report.precopy_round_dirty[-1] == 0
+
+
+def test_statefulset_precopy_optin_with_compression(tmp_path):
+    r = run_migration_experiment(
+        "ms2m_statefulset", 12.0, registry_root=str(tmp_path / "reg"),
+        seed=3, worker_factory=StripedBlobConsumer, chunk_bytes=CB,
+        policy=MigrationPolicy(precopy=True, compression="xor_rle"))
+    assert r.verified
+    assert r.report.precopy_rounds >= 1
+
+
+def test_unknown_codec_rejected():
+    with pytest.raises(ValueError):
+        MigrationPolicy(compression="gzip")
+    with pytest.raises(ValueError):
+        MigrationPolicy(compression={"state": "zstd"})

@@ -1,0 +1,112 @@
+#!/usr/bin/env python
+"""Docs consistency checker (the CI ``docs`` job).
+
+Two checks, so the docs cannot drift from the code:
+
+  * every intra-repo markdown link in ``README.md`` and ``docs/*.md``
+    resolves to an existing file (anchors stripped; external schemes
+    skipped);
+  * the README strategy table between the ``strategy-table`` markers
+    matches what the live strategy registry generates
+    (``repro.core.registry_entries``) — run with ``--write`` to update
+    it after registering or re-documenting a strategy.
+
+  python tools/check_docs.py [--write]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+TABLE_BEGIN = "<!-- strategy-table:begin -->"
+TABLE_END = "<!-- strategy-table:end -->"
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_SCHEMES = ("http://", "https://", "mailto:", "#")
+
+
+def doc_files():
+    files = [os.path.join(REPO, "README.md")]
+    docs = os.path.join(REPO, "docs")
+    if os.path.isdir(docs):
+        files += sorted(os.path.join(docs, f) for f in os.listdir(docs)
+                        if f.endswith(".md"))
+    return files
+
+
+def check_links() -> list:
+    errors = []
+    for path in doc_files():
+        with open(path) as f:
+            text = f.read()
+        for target in LINK_RE.findall(text):
+            if target.startswith(SKIP_SCHEMES):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(path), rel))
+            if not os.path.exists(resolved):
+                errors.append(f"{os.path.relpath(path, REPO)}: "
+                              f"broken link -> {target}")
+    return errors
+
+
+def strategy_table() -> str:
+    """The canonical README strategy table, generated from the registry."""
+    from repro.core import registry_entries
+
+    lines = [
+        "| strategy | flags | summary |",
+        "|---|---|---|",
+    ]
+    for row in registry_entries():
+        flags = ", ".join(
+            f for f, on in (("cutoff", row["wants_cutoff"]),
+                            ("identity", row["handles_identity"])) if on)
+        lines.append(f"| `{row['name']}` | {flags or '—'} "
+                     f"| {row['summary']} |")
+    return "\n".join(lines)
+
+
+def check_table(write: bool) -> list:
+    readme = os.path.join(REPO, "README.md")
+    with open(readme) as f:
+        text = f.read()
+    if TABLE_BEGIN not in text or TABLE_END not in text:
+        return [f"README.md: missing {TABLE_BEGIN} / {TABLE_END} markers"]
+    head, rest = text.split(TABLE_BEGIN, 1)
+    current, tail = rest.split(TABLE_END, 1)
+    want = "\n" + strategy_table() + "\n"
+    if current == want:
+        return []
+    if write:
+        with open(readme, "w") as f:
+            f.write(head + TABLE_BEGIN + want + TABLE_END + tail)
+        print("README.md strategy table regenerated")
+        return []
+    return ["README.md: strategy table is stale vs the live registry "
+            "(run: python tools/check_docs.py --write)"]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--write", action="store_true",
+                    help="rewrite the README strategy table in place")
+    args = ap.parse_args(argv)
+
+    errors = check_links() + check_table(write=args.write)
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    if not errors:
+        print(f"docs OK ({len(doc_files())} files checked)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
