@@ -10,6 +10,8 @@ the full result files under results/.
   beyond   beyond_paper       — batched replay + registry dedup (ours)
   delta    delta_precopy      — iterative delta checkpointing (ours)
   fleet    fleet_migration    — N-pod orchestrated migration (ours)
+  topo     fleet_topology     — contended-topology scenarios (ours):
+                                shared-link concurrency sweep + edge WAN
 
 ``--quick`` is the CI smoke profile: repeats=1, the paper rates only,
 hash-fold consumers everywhere (the JAX-compute sections are skipped), and
@@ -125,7 +127,7 @@ def main(argv=None) -> int:
     print(f"# delta_precopy done in {time.time()-t:.1f}s", file=sys.stderr)
 
     t = time.time()
-    from benchmarks.fleet_migration import run_fleet
+    from benchmarks.fleet_migration import run_fleet, run_topology
     for r in run_fleet(repeats=1 if args.quick else 2,
                        out_path="results/fleet_migration.json"):
         _csv(f"fleet/{r['scenario']}", r["span_mean"],
@@ -133,6 +135,17 @@ def main(argv=None) -> int:
              f"max_downtime={r['max_downtime_mean']}s "
              f"verified={r['all_verified']}")
     print(f"# fleet_migration done in {time.time()-t:.1f}s", file=sys.stderr)
+
+    t = time.time()
+    # contended topologies: quick = 1 repeat, 2 sweep points, 2 edge schemes
+    # (still writes/uploads results/fleet_topology.json from CI)
+    for r in run_topology(repeats=1 if args.quick else 2, quick=args.quick,
+                          out_path="results/fleet_topology.json"):
+        _csv(f"topo/{r['scenario']}", r["span_mean"],
+             f"max_downtime={r['max_downtime_mean']}s "
+             f"wire={r['wire_bytes_total']}B wan={r['wan_bytes_total']}B "
+             f"verified={r['all_verified']}")
+    print(f"# fleet_topology done in {time.time()-t:.1f}s", file=sys.stderr)
 
     print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
     return 0

@@ -1,4 +1,20 @@
-from repro.cluster.sim import Sim, Condition  # noqa: F401
+from repro.cluster.sim import (  # noqa: F401
+    Condition,
+    Link,
+    Sim,
+    TransferAborted,
+)
+from repro.cluster.network import (  # noqa: F401
+    LinkSpec,
+    NetworkTopology,
+    TOPOLOGY_PRESETS,
+    available_topologies,
+    edge_wan_topology,
+    flat_topology,
+    make_topology,
+    topology_entries,
+    two_zone_topology,
+)
 from repro.cluster.cluster import (  # noqa: F401
     APIServer,
     Cluster,

@@ -23,7 +23,8 @@ from typing import Any, Callable, Dict, Generator, List, Optional
 
 from repro.broker.broker import Broker, MessageQueue
 from repro.checkpoint.registry import Registry
-from repro.cluster.sim import Condition, Sim
+from repro.cluster.network import NetworkTopology, flat_topology, make_topology
+from repro.cluster.sim import Condition, Sim, TransferAborted
 
 
 @dataclasses.dataclass
@@ -58,7 +59,7 @@ class TimingConstants:
 
 
 class Node:
-    def __init__(self, name: str):
+    def __init__(self, name: str, sim: Optional[Sim] = None):
         self.name = name
         self.alive = True
         self.pods: Dict[str, "Pod"] = {}
@@ -66,6 +67,10 @@ class Node:
         # local image-layer cache (chunk keys): prefetched/pulled chunks are
         # free on later pulls — how pre-copy makes the final restore cheap
         self.image_chunks: set = set()
+        # triggered when the node dies: in-flight link transfers touching
+        # this node wait on it and abort; replaced fresh on revive
+        self.down: Optional[Condition] = (Condition(sim, f"{name}:down")
+                                          if sim is not None else None)
 
 
 class Pod:
@@ -193,11 +198,18 @@ class APIServer:
     """Control-plane facade: what the Migration Manager calls."""
 
     def __init__(self, sim: Sim, broker: Broker, registry: Registry,
-                 timings: TimingConstants):
+                 timings: TimingConstants,
+                 topology: Optional[NetworkTopology] = None):
         self.sim = sim
         self.broker = broker
         self.registry = registry
         self.timings = timings
+        # default: the flat preset — one dedicated-capacity registry link,
+        # bit-identical to the seed's bytes / registry_bw_Bps model
+        self.topology = (topology if topology is not None else
+                         flat_topology(
+                             registry_bw_Bps=timings.registry_bw_Bps))
+        self.topology.bind(sim)
         self.nodes: Dict[str, Node] = {}
         self.pods: Dict[str, Pod] = {}
         self.statefulsets = StatefulSetController()
@@ -208,18 +220,22 @@ class APIServer:
 
     # -- topology --------------------------------------------------------------
     def add_node(self, name: str) -> Node:
-        node = Node(name)
+        node = Node(name, sim=self.sim)
         self.nodes[name] = node
+        self.topology.ensure_node(name)
         return node
 
     def kill_node(self, name: str):
-        """Failure injection: every pod on the node dies instantly."""
+        """Failure injection: every pod on the node dies instantly, and
+        every in-flight link transfer touching the node aborts."""
         node = self.nodes[name]
         node.alive = False
         for pod in list(node.pods.values()):
             pod.stop()
             self.pods.pop(pod.name, None)
         node.pods.clear()
+        if node.down is not None:
+            node.down.trigger()
         self._log("node_killed", node=name)
 
     def revive_node(self, name: str):
@@ -228,6 +244,7 @@ class APIServer:
         node = self.nodes[name]
         node.alive = True
         node.last_heartbeat = self.sim.now
+        node.down = Condition(self.sim, f"{name}:down")  # re-arm the abort
         for pod in list(node.pods.values()):
             pod.wake()
         self._log("node_revived", node=name)
@@ -281,8 +298,38 @@ class APIServer:
         return (report.enc_raw_bytes / t.codec_Bps
                 + report.fp_bytes / t.fingerprint_Bps)
 
-    def build_and_push_image(self, checkpoint: dict, tag: str) -> Generator:
-        """Image Manager: OCI assembly + registry push (real bytes)."""
+    def _registry_transfer(self, node_name: Optional[str], nbytes: float,
+                           base_s: float, extra_s: float = 0.0) -> Generator:
+        """Charge one node<->registry transfer over the topology link.
+
+        Dedicated links (the ``flat`` preset) are charged as one combined
+        delay with the exact legacy ``base + bytes/bw + extra`` float
+        arithmetic, so flat timelines stay bit-identical to the seed —
+        including the seed's semantics that a mid-flight node death does
+        NOT interrupt the delay (a dead node still fails fast before the
+        transfer starts).  Shared links charge the fixed costs first, then
+        join the link as a fair-share flow; if the node dies mid-flight
+        the flow aborts with ``TransferAborted`` (the fleet orchestrator's
+        guard isolates it)."""
+        node = self.nodes.get(node_name) if node_name is not None else None
+        if node is not None and not node.alive:
+            raise TransferAborted(f"node {node_name} is dead")
+        link = self.topology.registry_link(node_name)
+        if not link.shared:
+            dur = base_s + nbytes / link.capacity_Bps + extra_s
+            if link.latency_s:
+                dur += link.latency_s
+            link.total_bytes += nbytes
+            yield dur
+            return
+        yield base_s + extra_s
+        yield from link.transfer(
+            nbytes, abort=node.down if node is not None else None)
+
+    def build_and_push_image(self, checkpoint: dict, tag: str,
+                             node_name: Optional[str] = None) -> Generator:
+        """Image Manager: OCI assembly + registry push (real bytes) over
+        the pushing node's registry link."""
         t = self.timings
         yield t.image_build_s
         report = self.registry.push_image(
@@ -290,15 +337,17 @@ class APIServer:
             meta={"last_msg_id": int(checkpoint["last_msg_id"]), "tag": tag},
             tag=tag,
         )
-        yield (t.push_base_s + report.written_bytes / t.registry_bw_Bps
-               + self._data_path_cost_s(report))
+        yield from self._registry_transfer(
+            node_name, report.written_bytes, t.push_base_s,
+            extra_s=self._data_path_cost_s(report))
         self._log("image_pushed", tag=tag, image_id=report.image_id,
                   written=report.written_bytes, deduped=report.deduped_bytes)
         return report
 
     def push_delta_image(self, checkpoint: dict, tag: str,
                          parent_image_id: str, *,
-                         compression="none", exact: bool = False) -> Generator:
+                         compression="none", exact: bool = False,
+                         node_name: Optional[str] = None) -> Generator:
         """Pre-copy round: delta layer vs the parent image — the wire only
         carries *encoded* chunks the registry doesn't already hold.
         ``compression`` selects the per-leaf delta codec; ``exact=True``
@@ -310,8 +359,9 @@ class APIServer:
             meta={"last_msg_id": int(checkpoint["last_msg_id"]), "tag": tag},
             tag=tag, compression=compression, exact=exact,
         )
-        yield (t.push_base_s + report.written_bytes / t.registry_bw_Bps
-               + self._data_path_cost_s(report))
+        yield from self._registry_transfer(
+            node_name, report.written_bytes, t.push_base_s,
+            extra_s=self._data_path_cost_s(report))
         self._log("delta_pushed", tag=tag, image_id=report.image_id,
                   parent=parent_image_id, delta=report.delta_bytes,
                   wire=report.wire_bytes, written=report.written_bytes,
@@ -326,7 +376,8 @@ class APIServer:
         chunks = self.registry.image_chunks(image_id)
         new_bytes = sum(size for key, size in chunks.items()
                         if key not in node.image_chunks)
-        yield t.pull_base_s + new_bytes / t.registry_bw_Bps
+        yield from self._registry_transfer(node_name, new_bytes,
+                                           t.pull_base_s)
         # cache only after the transfer lands: a concurrent pull to the same
         # node must not ride for free on bytes still in flight
         node.image_chunks.update(chunks)
@@ -344,7 +395,7 @@ class APIServer:
         trees, pulled = self.registry.pull_image(
             image_id,
             have_chunks=node.image_chunks if node is not None else None)
-        yield t.pull_base_s + pulled / t.registry_bw_Bps
+        yield from self._registry_transfer(node_name, pulled, t.pull_base_s)
         if node is not None:  # cache after the transfer lands (see prefetch)
             node.image_chunks.update(self.registry.image_chunks(image_id))
         yield t.restore_s
@@ -372,16 +423,26 @@ class APIServer:
 
 
 class Cluster:
-    """Convenience bundle: sim + broker + registry + api server."""
+    """Convenience bundle: sim + broker + registry + api server.
+
+    ``topology`` selects the network model: ``None`` / ``"flat"`` (the
+    seed-identical uncontended registry link), another preset name
+    (``"two_zone"``, ``"edge_wan"``), a ready ``NetworkTopology``, or a
+    factory ``(node_names, registry_bw_Bps) -> NetworkTopology``."""
 
     def __init__(self, registry_root: str,
                  timings: Optional[TimingConstants] = None,
                  num_nodes: int = 3,
-                 chunk_bytes: Optional[int] = None):
+                 chunk_bytes: Optional[int] = None,
+                 topology=None):
         self.sim = Sim()
         self.broker = Broker(self.sim)
         self.registry = Registry(registry_root, chunk_bytes=chunk_bytes)
         self.timings = timings or TimingConstants()
-        self.api = APIServer(self.sim, self.broker, self.registry, self.timings)
-        for i in range(num_nodes):
-            self.api.add_node(f"node{i}")
+        node_names = [f"node{i}" for i in range(num_nodes)]
+        self.topology = make_topology(topology, node_names,
+                                      self.timings.registry_bw_Bps)
+        self.api = APIServer(self.sim, self.broker, self.registry,
+                             self.timings, topology=self.topology)
+        for name in node_names:
+            self.api.add_node(name)

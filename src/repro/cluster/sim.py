@@ -72,10 +72,31 @@ class Sim:
         return Condition(self, name)
 
     def any_of(self, *conds: Condition, name: str = "any") -> Condition:
-        """Condition triggering when the first of ``conds`` triggers."""
+        """Condition triggering when the first of ``conds`` triggers.
+
+        The losers are detached when the winner fires: callers that
+        repeatedly build ``any_of`` over long-lived conditions (the fleet
+        driver's wakeup loop) must not grow the losers' callback lists
+        unboundedly."""
         out = Condition(self, name)
+        armed: List[Condition] = []
+
+        def fire(value: Any = None):
+            for c in armed:
+                if not c.triggered:
+                    try:
+                        c._callbacks.remove(fire)
+                    except ValueError:
+                        pass
+            armed.clear()
+            out.trigger(value)
+
         for c in conds:
-            c.on_trigger(out.trigger)
+            if c.triggered:
+                fire(c.value)
+                break
+            armed.append(c)
+            c._callbacks.append(fire)
         return out
 
     def process(self, gen: Generator, name: str = "") -> Condition:
@@ -109,6 +130,12 @@ class Sim:
         else:
             raise TypeError(f"process {proc.name} yielded {type(yielded)}")
 
+    # -- fair-share flows ------------------------------------------------------
+    def link(self, capacity_Bps: float, latency_s: float = 0.0,
+             name: str = "link", shared: bool = True) -> "Link":
+        return Link(self, capacity_Bps, latency_s=latency_s, name=name,
+                    shared=shared)
+
     # -- run -------------------------------------------------------------------
     def run(self, until: Optional[float] = None,
             stop_when: Optional[Condition] = None):
@@ -124,3 +151,169 @@ class Sim:
             fn(arg)
         if until is not None:
             self.now = max(self.now, until)
+
+
+class TransferAborted(RuntimeError):
+    """An in-flight Link transfer was withdrawn (e.g. an endpoint died)."""
+
+
+class _Flow:
+    __slots__ = ("nbytes", "remaining", "done")
+
+    def __init__(self, sim: Sim, nbytes: float):
+        self.nbytes = nbytes
+        self.remaining = nbytes
+        self.done = Condition(sim, "flow")
+
+
+class Link:
+    """A capacity-limited network link with max-min fair bandwidth sharing.
+
+    Concurrent ``transfer(nbytes)`` flows split the capacity equally;
+    remaining bytes and per-flow rate are recomputed on every flow arrival
+    and departure (progressive filling).  The schedule is deterministic and
+    heap-driven — each recompute arms exactly one next-completion event,
+    superseded by a generation counter when the flow set changes — so a
+    link never polls.  Work conservation: when a short flow finishes, the
+    survivors immediately speed up.
+
+    ``shared=False`` is the dedicated-capacity (legacy) mode: every
+    transfer is charged ``nbytes / capacity`` independently, with no
+    contention — the ``flat`` topology preset uses it to reproduce the
+    uncontended single-registry-link model bit-for-bit.
+    """
+
+    _EPS_BYTES = 1e-6  # float-settlement slack when finishing a flow
+
+    def __init__(self, sim: Sim, capacity_Bps: float, latency_s: float = 0.0,
+                 name: str = "link", shared: bool = True):
+        if capacity_Bps <= 0:
+            raise ValueError(f"link {name!r} needs capacity_Bps > 0")
+        self.sim = sim
+        self.capacity_Bps = float(capacity_Bps)
+        self.latency_s = float(latency_s)
+        self.name = name
+        self.shared = shared
+        self.total_bytes = 0.0      # lifetime bytes accepted onto the link
+        self.peak_flows = 0
+        self.aborted_flows = 0
+        self._flows: List[_Flow] = []
+        self._last = sim.now
+        self._gen = 0
+
+    @property
+    def n_flows(self) -> int:
+        return len(self._flows)
+
+    @property
+    def queued_bytes(self) -> float:
+        """Bytes still in flight across all active flows (load signal)."""
+        self._settle()
+        return sum(f.remaining for f in self._flows)
+
+    def rate_per_flow(self) -> float:
+        return (self.capacity_Bps / len(self._flows) if self._flows
+                else self.capacity_Bps)
+
+    # -- progressive filling ---------------------------------------------------
+    def _settle(self) -> None:
+        """Credit progress at the rate that held since the last event."""
+        now = self.sim.now
+        dt = now - self._last
+        self._last = now
+        if dt <= 0.0 or not self._flows:
+            return
+        rate = self.capacity_Bps / len(self._flows)
+        for f in self._flows:
+            f.remaining -= rate * dt
+
+    def _finish_completed(self) -> None:
+        still: List[_Flow] = []
+        for f in self._flows:
+            if f.remaining <= self._EPS_BYTES:
+                f.done.trigger()
+            else:
+                still.append(f)
+        self._flows = still
+
+    def _reschedule(self) -> None:
+        self._gen += 1
+        if not self._flows:
+            return
+        gen = self._gen
+        rate = self.capacity_Bps / len(self._flows)
+        dt = min(f.remaining for f in self._flows) / rate
+        self.sim.call_at(self.sim.now + dt, lambda: self._on_tick(gen))
+
+    def _on_tick(self, gen: int) -> None:
+        if gen != self._gen:  # superseded by an arrival/departure
+            return
+        self._settle()
+        self._finish_completed()
+        self._reschedule()
+
+    # -- the flow API ----------------------------------------------------------
+    def transfer(self, nbytes: float, abort: Optional[Condition] = None
+                 ) -> Generator:
+        """Generator process: move ``nbytes`` across the link, fair-sharing
+        with every concurrent flow.  Charges the per-transfer latency
+        first.  If ``abort`` (a Condition) triggers mid-flight, the flow is
+        withdrawn — survivors speed up — and ``TransferAborted`` raises
+        into the calling process.  Returns the elapsed transfer seconds
+        (excluding latency)."""
+        if abort is not None and abort.triggered:
+            raise TransferAborted(f"{self.name}: aborted before start")
+        if self.latency_s > 0.0:
+            yield self.latency_s
+        if nbytes <= 0:
+            return 0.0
+        self.total_bytes += nbytes
+        t0 = self.sim.now
+        if not self.shared:  # dedicated capacity: no contention
+            duration = nbytes / self.capacity_Bps
+            if abort is None:
+                yield duration
+            else:
+                timer = Condition(self.sim, f"{self.name}:xfer")
+                self.sim.call_after(duration, timer.trigger)
+                yield self.sim.any_of(timer, abort)
+                if not timer.triggered:
+                    undelivered = nbytes * (1.0 - (self.sim.now - t0)
+                                            / duration)
+                    self.total_bytes -= max(0.0, undelivered)
+                    self.aborted_flows += 1
+                    raise TransferAborted(
+                        f"{self.name}: dedicated transfer aborted with "
+                        f"{undelivered:.0f}/{nbytes:.0f} bytes left")
+            return self.sim.now - t0
+        self._settle()
+        flow = _Flow(self.sim, float(nbytes))
+        self._flows.append(flow)
+        self.peak_flows = max(self.peak_flows, len(self._flows))
+        self._reschedule()
+        if abort is None:
+            yield flow.done
+        else:
+            yield self.sim.any_of(flow.done, abort)
+            if not flow.done.triggered:
+                self._settle()
+                if flow in self._flows:
+                    self._flows.remove(flow)
+                # total_bytes reports DELIVERED traffic: give back what the
+                # withdrawn flow never moved
+                self.total_bytes -= max(0.0, flow.remaining)
+                self.aborted_flows += 1
+                self._reschedule()
+                raise TransferAborted(
+                    f"{self.name}: transfer aborted with "
+                    f"{flow.remaining:.0f}/{nbytes:.0f} bytes left")
+        return self.sim.now - t0
+
+    def stats(self) -> dict:
+        return {"name": self.name,
+                "capacity_Bps": self.capacity_Bps,
+                "latency_s": self.latency_s,
+                "shared": self.shared,
+                "total_bytes": int(self.total_bytes),
+                "peak_flows": self.peak_flows,
+                "aborted_flows": self.aborted_flows}

@@ -24,7 +24,9 @@ from repro.core.strategy import (  # noqa: F401
 from repro.core.orchestrator import (  # noqa: F401
     ClusterMigrationOrchestrator,
     FleetReport,
+    PLACEMENT_POLICIES,
     PodMigrationSpec,
+    available_placements,
     run_fleet_experiment,
 )
 from repro.core.workload import (  # noqa: F401

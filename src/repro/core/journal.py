@@ -92,7 +92,10 @@ def recover_worker(api, registry: Registry, journal: Journal, tag: str,
     image_id = registry.resolve(tag)
     assert image_id is not None, f"no image tagged {tag}"
     worker = make_worker()
-    meta = yield from api.pull_and_restore(image_id, worker)
+    # charge the pull to the node the pod recovers onto: its registry
+    # link (WAN if the node is remote), its layer cache, its death abort
+    meta = yield from api.pull_and_restore(image_id, worker,
+                                           node_name=target_node)
     marker = int(meta.get("last_msg_id", -1))
     journal.flush()
     suffix = journal.replay_range(marker + 1)

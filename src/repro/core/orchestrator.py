@@ -34,28 +34,118 @@ verification against an independent reference fold (sets
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from collections import deque
-from typing import Any, Callable, Dict, Generator, List, Optional
+from typing import Any, Callable, Dict, Generator, List, Optional, Union
 
 import numpy as np
 
-from repro.cluster.cluster import APIServer, Cluster, Pod, TimingConstants
+from repro.cluster.cluster import APIServer, Cluster, Node, Pod, TimingConstants
 from repro.cluster.sim import Condition
 from repro.core.cutoff import CutoffController
 from repro.core.migration import MigrationManager, MigrationReport
 from repro.core.policy import MigrationPolicy
-from repro.core.strategy import get_strategy
+from repro.core.strategy import get_strategy, worker_state_nbytes
 
 
 @dataclasses.dataclass
 class PodMigrationSpec:
-    """One pod to move: where from is implied by the pod, where to is not."""
+    """One pod to move: where from is implied by the pod, where to is not.
+
+    ``target_node=None`` defers target selection to the orchestrator's
+    placement policy, resolved when the spec actually starts (so the score
+    sees the link load of the migrations already in flight)."""
     pod: Pod
     queue: str                       # the pod's primary queue name
-    target_node: str
+    target_node: Optional[str] = None
     strategy: str = "ms2m_individual"
     identity: Optional[str] = None   # StatefulSet identity to hand off
     policy: Optional[MigrationPolicy] = None  # overrides the fleet policy
+
+
+# ---------------------------------------------------------------------------
+# Placement policies (target-node selection)
+# ---------------------------------------------------------------------------
+
+def make_round_robin_placement(api: APIServer,
+                               inflight: Dict[str, int]) -> Callable[
+        [Pod, List[Node]], str]:
+    """The legacy default: blind rotation over the candidate nodes."""
+    rr = itertools.count()
+
+    def pick(pod: Pod, candidates: List[Node]) -> str:
+        return candidates[next(rr) % len(candidates)].name
+
+    return pick
+
+
+def make_topology_aware_placement(api: APIServer,
+                                  inflight: Dict[str, int]) -> Callable[
+        [Pod, List[Node]], str]:
+    """Score candidates by (zone distance x estimated wire bytes, current
+    registry-link load), cheapest first.
+
+    The distance term counts both legs the migration's bytes ride — the
+    pull from the registry to the candidate and the affinity to the
+    source's zone — times the pod's state size (the wire-byte estimate).
+    Ties break on the candidate's registry-link load (bytes still in
+    flight + active flows), then occupancy (pods already there plus
+    ``inflight`` migrations targeting it), then name (deterministic)."""
+    topo = api.topology
+
+    def pick(pod: Pod, candidates: List[Node]) -> str:
+        src_zone = topo.zone(pod.node.name)
+        dist = {}
+        for node in candidates:
+            zone = topo.zone(node.name)
+            dist[node.name] = (topo.zone_distance(topo.registry_zone, zone)
+                               + topo.zone_distance(src_zone, zone))
+        # the byte estimate scales the distance term; when every candidate
+        # is equidistant it cannot change the argmin, so skip measuring
+        # the state entirely
+        est_bytes = (max(1, worker_state_nbytes(pod.worker))
+                     if len(set(dist.values())) > 1 else 1)
+
+        def score(node: Node):
+            link = topo.registry_link(node.name)
+            return (dist[node.name] * est_bytes,
+                    link.queued_bytes + link.n_flows,
+                    len(node.pods) + inflight.get(node.name, 0), node.name)
+
+        return min(candidates, key=score).name
+
+    return pick
+
+
+PLACEMENT_POLICIES: Dict[str, Callable[[APIServer, Dict[str, int]],
+                                       Callable]] = {
+    "round_robin": make_round_robin_placement,
+    "topology": make_topology_aware_placement,
+}
+
+
+def available_placements() -> List[str]:
+    return sorted(PLACEMENT_POLICIES)
+
+
+def resolve_placement(placement: Union[str, Callable, None],
+                      api: APIServer,
+                      inflight: Optional[Dict[str, int]] = None
+                      ) -> Callable[[Pod, List[Node]], str]:
+    """None -> the topology-aware default; a name -> the registered
+    factory (called with the api and the orchestrator's in-flight target
+    counts); a callable -> used as-is (``pick(pod, candidates) -> str``)."""
+    if placement is None:
+        placement = "topology"
+    if callable(placement):
+        return placement
+    try:
+        factory = PLACEMENT_POLICIES[placement]
+    except KeyError:
+        raise ValueError(
+            f"unknown placement policy {placement!r}; "
+            f"available: {available_placements()}") from None
+    return factory(api, inflight if inflight is not None else {})
 
 
 @dataclasses.dataclass
@@ -68,6 +158,8 @@ class FleetReport:
     peak_concurrency: int = 0
     # specs whose migration raised (error isolated, fleet kept going)
     failures: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+    # per-link byte/flow telemetry of the topology the fleet ran over
+    network: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     @property
     def n_migrated(self) -> int:
@@ -146,6 +238,7 @@ class FleetReport:
             "strategies": sorted({r.strategy for r in self.reports}),
             "downtime_by_strategy": self.downtime_by_strategy(),
             "failures": [dict(f) for f in self.failures],
+            "network": dict(self.network),
         }
 
 
@@ -156,12 +249,19 @@ class ClusterMigrationOrchestrator:
                  max_concurrent: int = 4,
                  cutoff_factory: Optional[Callable[[], CutoffController]] = None,
                  policy: Optional[MigrationPolicy] = None,
+                 placement: Union[str, Callable, None] = None,
                  manager_kwargs: Optional[Dict[str, Any]] = None):
         self.api = api
         self.sim = api.sim
         self.make_worker = make_worker
         self.max_concurrent = max_concurrent
         self.cutoff_factory = cutoff_factory
+        # target-node selection for specs that leave target_node=None (and
+        # the drain default): "topology" | "round_robin" | a callable.
+        # _inflight counts migrations currently targeting each node, so
+        # simultaneous placements don't all tie onto one candidate
+        self._inflight: Dict[str, int] = {}
+        self.placement = resolve_placement(placement, api, self._inflight)
         # legacy shim: manager_kwargs={"precopy": True, ...} folds into the
         # declarative policy
         self.policy = MigrationPolicy.resolve(policy, **(manager_kwargs or {}))
@@ -193,12 +293,32 @@ class ClusterMigrationOrchestrator:
         return self.sim.process(self._drive(list(specs), limit, fleet),
                                 name=f"fleet:{len(specs)}x{limit}")
 
+    def pick_target(self, pod: Pod) -> str:
+        """Run the placement policy over the alive nodes (excluding the
+        pod's own — migrating onto the source node is a no-op)."""
+        candidates = [n for n in self.api.nodes.values()
+                      if n.alive and n.name != pod.node.name]
+        if not candidates:
+            raise RuntimeError(
+                f"no alive target node to place {pod.name} "
+                f"(source {pod.node.name})")
+        return self.placement(pod, candidates)
+
     def _guard(self, spec: PodMigrationSpec) -> Generator:
         """One migration with failure isolation: any exception — spec
-        validation, a dead target node mid-fleet, a strategy bug — fails
-        this spec only, never the fleet (the strategy's own cleanup still
-        runs via its finally block)."""
+        validation, a dead target node mid-fleet, an aborted transfer, a
+        strategy bug — fails this spec only, never the fleet (the
+        strategy's own cleanup still runs via its finally block)."""
+        target_node = None
         try:
+            if spec.target_node is None:
+                # placement deferred to start time: the score sees the
+                # link load of the migrations already in flight
+                spec = dataclasses.replace(
+                    spec, target_node=self.pick_target(spec.pod))
+            target_node = spec.target_node
+            self._inflight[target_node] = (
+                self._inflight.get(target_node, 0) + 1)
             mgr = self.manager_for(spec.queue)
             report, target = yield from mgr.migration(
                 spec.strategy, spec.pod, spec.target_node,
@@ -206,6 +326,9 @@ class ClusterMigrationOrchestrator:
             return "ok", report, target
         except Exception as exc:  # noqa: BLE001 — isolate any spec failure
             return "failed", spec, exc
+        finally:
+            if target_node is not None:
+                self._inflight[target_node] -= 1
 
     def _drive(self, specs: List[PodMigrationSpec], limit: int,
                fleet: FleetReport) -> Generator:
@@ -238,6 +361,7 @@ class ClusterMigrationOrchestrator:
                         "error": f"{type(exc).__name__}: {exc}",
                     })
         fleet.t_end = self.sim.now
+        fleet.network = self.api.topology.stats()
         return fleet
 
     # -- rolling StatefulSet migration ---------------------------------------
@@ -258,24 +382,22 @@ class ClusterMigrationOrchestrator:
                    max_concurrent: Optional[int] = None) -> Condition:
         """Migrate every pod off ``node_name`` (maintenance drain).  Pods
         holding a StatefulSet identity are moved with ms2m_statefulset
-        regardless of ``strategy``; targets default to round-robin over the
-        other alive nodes."""
+        regardless of ``strategy``; targets default to the orchestrator's
+        placement policy (topology-aware unless configured otherwise),
+        scored when each spec starts.  ``target_node_for`` pins targets
+        explicitly and bypasses the policy."""
         others = [n for n in self.api.nodes.values()
                   if n.alive and n.name != node_name]
         if not others:
             raise RuntimeError(f"no alive node to drain {node_name} onto")
 
-        def default_target(pod: Pod, _rr=[0]) -> str:
-            node = others[_rr[0] % len(others)]
-            _rr[0] += 1
-            return node.name
-
-        pick = target_node_for or default_target
         specs = []
         for pod in list(self.api.nodes[node_name].pods.values()):
             identity = self.identity_of(pod)
             specs.append(PodMigrationSpec(
-                pod=pod, queue=pod.queue.name, target_node=pick(pod),
+                pod=pod, queue=pod.queue.name,
+                target_node=(target_node_for(pod) if target_node_for
+                             else None),
                 strategy="ms2m_statefulset" if identity else strategy,
                 identity=identity))
         return self.migrate_fleet(specs, max_concurrent=max_concurrent)
@@ -304,17 +426,30 @@ def run_fleet_experiment(
     policy: Optional[MigrationPolicy] = None,
     manager_kwargs: Optional[Dict[str, Any]] = None,
     t_replay_max: float = 45.0,
+    topology=None,                   # preset name | NetworkTopology | factory
+    placement: Union[str, Callable, None] = None,
+    auto_targets: bool = False,      # let the placement policy pick targets
 ) -> FleetReport:
     """N queues x N Poisson producers x N consumer pods; orchestrated
     migration per ``mode``; per-pod verification against an independent
     reference fold of each queue's published log (no loss, no duplication,
-    no reordering), recorded in ``MigrationReport.state_verified``."""
+    no reordering), recorded in ``MigrationReport.state_verified``.
+
+    ``topology`` selects the network model (default: the seed-identical
+    ``flat`` preset); ``auto_targets=True`` leaves each spec's target to
+    the orchestrator's ``placement`` policy instead of pinning the
+    reserved last node."""
     from repro.core.workload import HashConsumer, reference_fold
 
+    if num_nodes < 2:
+        raise ValueError(
+            f"run_fleet_experiment needs num_nodes >= 2 (got {num_nodes}): "
+            "with a single node every source would also be its own "
+            "migration target — there is nowhere to migrate to")
     timings = dataclasses.replace(timings or TimingConstants(),
                                   processing_ms=processing_ms)
     cluster = Cluster(registry_root, timings=timings, num_nodes=num_nodes,
-                      chunk_bytes=chunk_bytes)
+                      chunk_bytes=chunk_bytes, topology=topology)
     sim, api, broker = cluster.sim, cluster.api, cluster.broker
     make_worker = worker_factory or (lambda: HashConsumer())
     mu = 1000.0 / processing_ms
@@ -367,7 +502,7 @@ def run_fleet_experiment(
             lam_fallback=message_rate)
     orch = ClusterMigrationOrchestrator(
         api, make_worker, max_concurrent=max_concurrent,
-        cutoff_factory=cutoff_factory, policy=policy,
+        cutoff_factory=cutoff_factory, policy=policy, placement=placement,
         manager_kwargs=manager_kwargs)
 
     if mode == "drain":
@@ -376,7 +511,8 @@ def run_fleet_experiment(
     else:
         specs = [PodMigrationSpec(
             pod=pod, queue=pod.queue.name,
-            target_node=f"node{num_nodes - 1}", strategy=strategy,
+            target_node=None if auto_targets else f"node{num_nodes - 1}",
+            strategy=strategy,
             identity=f"consumer-{i}" if rolling else None)
             for i, pod in enumerate(sources)]
         done = (orch.rolling_statefulset(specs) if rolling

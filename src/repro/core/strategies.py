@@ -262,7 +262,17 @@ class MS2MAdaptive(MigrationStrategy):
         t = ctx.api.timings
         fixed_s = (t.checkpoint_s + t.image_build_s + t.push_base_s
                    + t.pod_create_s + t.pull_base_s + t.restore_s)
-        wire_s = 2.0 * ctx.state_nbytes() / t.registry_bw_Bps  # push + pull
+        # push (source leg) + pull (target leg), each over its own
+        # topology link class; identical legs keep the legacy 2x/bw form
+        # so flat-preset decisions stay bit-identical to the seed
+        topo = ctx.api.topology
+        bw_push = topo.registry_capacity_Bps(ctx.source.node.name)
+        bw_pull = topo.registry_capacity_Bps(ctx.target_node)
+        nbytes = ctx.state_nbytes()
+        if bw_push == bw_pull:
+            wire_s = 2.0 * nbytes / bw_push
+        else:
+            wire_s = nbytes / bw_push + nbytes / bw_pull
         t_replay_max = (ctx.cutoff.t_replay_max if ctx.cutoff is not None
                         else ctx.policy.t_replay_max)
         return choose_adaptive_strategy(

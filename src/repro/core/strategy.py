@@ -240,7 +240,8 @@ class MigrationContext:
         self.phase("checkpoint", t0)
 
         t0 = self.sim.now
-        push = yield from self.api.build_and_push_image(ckpt, tag)
+        push = yield from self.api.build_and_push_image(
+            ckpt, tag, node_name=self.source.node.name)
         rep.image_id = push.image_id
         rep.image_written_bytes = push.written_bytes
         rep.image_deduped_bytes = push.deduped_bytes
@@ -284,7 +285,7 @@ class MigrationContext:
     def state_nbytes(self) -> int:
         """Approximate serialized size of the source worker's state tree —
         the wire cost of one full checkpoint image."""
-        return _tree_nbytes(self.source.worker.state_tree())
+        return worker_state_nbytes(self.source.worker)
 
     def observed_rates(self) -> tuple:
         """(lambda, mu) estimates: the CutoffController's view when one is
@@ -299,17 +300,28 @@ class MigrationContext:
         return lam, mu
 
 
-def _tree_nbytes(tree: Any) -> int:
+def tree_nbytes(tree: Any) -> int:
+    """Approximate serialized size of a state pytree."""
     if isinstance(tree, dict):
-        return sum(_tree_nbytes(v) for v in tree.values())
+        return sum(tree_nbytes(v) for v in tree.values())
     if isinstance(tree, (list, tuple)):
-        return sum(_tree_nbytes(v) for v in tree)
+        return sum(tree_nbytes(v) for v in tree)
     nbytes = getattr(tree, "nbytes", None)
     if nbytes is not None:
         return int(nbytes)
     if isinstance(tree, (bytes, bytearray)):
         return len(tree)
     return 8  # python scalar
+
+
+def worker_state_nbytes(worker: Any) -> int:
+    """State size of a worker, preferring its own ``state_nbytes()``
+    (copy-free) over measuring a full ``state_tree()`` snapshot — workers
+    whose snapshots copy large buffers should implement the former."""
+    probe = getattr(worker, "state_nbytes", None)
+    if callable(probe):
+        return int(probe())
+    return tree_nbytes(worker.state_tree())
 
 
 # ---------------------------------------------------------------------------
@@ -380,7 +392,7 @@ class IterativePrecopyTransfer(TransferEngine):
             t0 = sim.now
             delta = yield from api.push_delta_image(
                 ckpt, f"{tag}-r{rep.precopy_rounds + 1}", push.image_id,
-                compression=pol.compression)
+                compression=pol.compression, node_name=source.node.name)
             yield from api.prefetch_image(ctx.target_node, delta.image_id)
             ctx.phase("precopy_delta", t0)
             push = delta
@@ -409,7 +421,8 @@ class IterativePrecopyTransfer(TransferEngine):
             t0 = sim.now
             flush = yield from api.push_delta_image(
                 ckpt, f"{tag}-exact", push.image_id,
-                compression=pol.compression, exact=True)
+                compression=pol.compression, exact=True,
+                node_name=source.node.name)
             yield from api.prefetch_image(ctx.target_node, flush.image_id)
             ctx.phase("precopy_exact_flush", t0)
             push = flush

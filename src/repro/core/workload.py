@@ -168,6 +168,8 @@ def run_migration_experiment(
     verify: bool = True,
     chunk_bytes: Optional[int] = None,
     policy: Optional[MigrationPolicy] = None,
+    topology=None,                   # preset name | NetworkTopology | factory
+    num_nodes: int = 3,
     # legacy knobs, folded into the policy (None = unset):
     batched_replay: Optional[bool] = None,
     replay_speedup: Optional[float] = None,
@@ -178,8 +180,12 @@ def run_migration_experiment(
                                     precopy, manager_kwargs)
     timings = timings or TimingConstants()
     timings = dataclasses.replace(timings, processing_ms=processing_ms)
-    cluster = Cluster(registry_root, timings=timings, num_nodes=3,
-                      chunk_bytes=chunk_bytes)
+    if num_nodes < 2:
+        raise ValueError(
+            f"run_migration_experiment needs num_nodes >= 2 (got "
+            f"{num_nodes}): the migration target must be a different node")
+    cluster = Cluster(registry_root, timings=timings, num_nodes=num_nodes,
+                      chunk_bytes=chunk_bytes, topology=topology)
     sim, api, broker = cluster.sim, cluster.api, cluster.broker
     primary = broker.declare_queue("orders")
 

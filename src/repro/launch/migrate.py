@@ -19,6 +19,7 @@ import importlib
 import json
 import tempfile
 
+from repro.cluster import available_topologies, topology_entries
 from repro.core import (
     MigrationPolicy,
     available_strategies,
@@ -27,6 +28,13 @@ from repro.core import (
     registry_entries,
     run_migration_experiment,
 )
+
+
+def list_topologies() -> int:
+    """Print every network topology preset with its docstring summary."""
+    for row in topology_entries():
+        print(f"{row['name']:12s} {row['summary']}")
+    return 0
 
 
 def list_strategies() -> int:
@@ -61,6 +69,12 @@ def main(argv=None) -> int:
                          "handles_identity flags, docstring) and exit")
     ap.add_argument("--strategy", default="ms2m_individual",
                     choices=available_strategies())
+    ap.add_argument("--topology", default="flat",
+                    choices=available_topologies(),
+                    help="network topology preset the cluster runs over "
+                         "(flat = the uncontended seed model)")
+    ap.add_argument("--list-topologies", action="store_true",
+                    help="print the topology presets and exit")
     ap.add_argument("--rate", type=float, default=10.0)
     ap.add_argument("--processing-ms", type=float, default=50.0)
     ap.add_argument("--t-replay-max", type=float, default=45.0)
@@ -81,6 +95,8 @@ def main(argv=None) -> int:
 
     if args.list_strategies:
         return list_strategies()
+    if args.list_topologies:
+        return list_topologies()
 
     worker_factory = None
     speedup = 1.0
@@ -104,7 +120,8 @@ def main(argv=None) -> int:
     r = run_migration_experiment(
         args.strategy, args.rate, registry_root=registry,
         processing_ms=args.processing_ms, t_replay_max=args.t_replay_max,
-        seed=args.seed, worker_factory=worker_factory, policy=policy)
+        seed=args.seed, worker_factory=worker_factory, policy=policy,
+        topology=args.topology)
     print(json.dumps(r.row(), indent=2))
     if args.events:
         print(json.dumps(r.report.event_rows(), indent=2))

@@ -51,6 +51,30 @@ def test_sim_any_of():
     assert got == [3.0]
 
 
+def test_any_of_detaches_losers_no_callback_growth():
+    """Regression: the fleet driver builds a fresh any_of over the same
+    still-active conditions on every wakeup; the losers' callback lists
+    must not grow across iterations (each winner detaches its round)."""
+    sim = Sim()
+    a, b = sim.condition(), sim.condition()
+    for _ in range(100):
+        c = sim.condition()
+        out = sim.any_of(a, b, c)
+        c.trigger()
+        assert out.triggered
+    assert len(a._callbacks) == 0
+    assert len(b._callbacks) == 0
+
+
+def test_any_of_with_already_triggered_condition():
+    sim = Sim()
+    a, b = sim.condition(), sim.condition()
+    b.trigger("v")
+    out = sim.any_of(a, b)
+    assert out.triggered and out.value == "v"
+    assert len(a._callbacks) == 0  # the pending loser was detached too
+
+
 def test_sub_process_return_values():
     sim = Sim()
 

@@ -1,0 +1,517 @@
+"""Contended network layer: fair-share Link math, topology routing,
+flat-preset backward compatibility, mid-flight aborts and topology-aware
+placement."""
+import numpy as np
+import pytest
+
+from repro.cluster.network import (
+    LinkSpec,
+    NetworkTopology,
+    available_topologies,
+    edge_wan_topology,
+    flat_topology,
+    make_topology,
+    topology_entries,
+    two_zone_topology,
+)
+from repro.cluster.sim import Sim, TransferAborted
+from repro.core import HashConsumer
+
+
+# ---------------------------------------------------------------------------
+# Link: fair-share flow math
+# ---------------------------------------------------------------------------
+
+def test_two_flows_split_bandwidth_then_survivor_speeds_up():
+    """100B and 50B flows on a 10 B/s link, both starting at t=0: each
+    runs at 5 B/s until the short one finishes at t=10; the survivor then
+    gets the full 10 B/s and finishes its remaining 50B at t=15."""
+    sim = Sim()
+    link = sim.link(10.0)
+    done = {}
+
+    def flow(name, nbytes):
+        yield from link.transfer(nbytes)
+        done[name] = sim.now
+
+    sim.process(flow("long", 100))
+    sim.process(flow("short", 50))
+    sim.run()
+    assert done["short"] == pytest.approx(10.0)
+    assert done["long"] == pytest.approx(15.0)  # work conserving: 150B/10Bps
+    assert link.peak_flows == 2
+    assert link.total_bytes == 150
+
+
+def test_staggered_arrival_recomputes_rates():
+    """A 100B flow alone for 5s (50B done), then a 25B flow joins: both
+    run at 5 B/s, the newcomer finishes its 25B at t=10, and the first
+    flow's last 25B run at full rate again -> t=12.5 (= 125B / 10 B/s,
+    work conserving)."""
+    sim = Sim()
+    link = sim.link(10.0)
+    done = {}
+
+    def flow(name, nbytes, start):
+        yield start
+        yield from link.transfer(nbytes)
+        done[name] = sim.now
+
+    sim.process(flow("a", 100, 0.0))
+    sim.process(flow("b", 25, 5.0))
+    sim.run()
+    assert done["b"] == pytest.approx(10.0)
+    assert done["a"] == pytest.approx(12.5)
+
+
+def test_unshared_link_has_no_contention():
+    sim = Sim()
+    link = sim.link(10.0, shared=False)
+    done = {}
+
+    def flow(name):
+        yield from link.transfer(100)
+        done[name] = sim.now
+
+    sim.process(flow("a"))
+    sim.process(flow("b"))
+    sim.run()
+    assert done == {"a": pytest.approx(10.0), "b": pytest.approx(10.0)}
+
+
+def test_latency_charged_per_transfer_and_zero_bytes():
+    sim = Sim()
+    link = sim.link(10.0, latency_s=2.0)
+    done = {}
+
+    def flow(name, nbytes):
+        yield from link.transfer(nbytes)
+        done[name] = sim.now
+
+    sim.process(flow("empty", 0))
+    sim.process(flow("ten", 10))
+    sim.run()
+    assert done["empty"] == pytest.approx(2.0)   # latency only
+    assert done["ten"] == pytest.approx(3.0)     # 2s latency + 1s wire
+
+
+def test_abort_withdraws_flow_and_survivor_speeds_up():
+    sim = Sim()
+    link = sim.link(10.0)
+    abort = sim.condition()
+    out = {}
+
+    def victim():
+        try:
+            yield from link.transfer(100, abort=abort)
+        except TransferAborted:
+            out["victim"] = ("aborted", sim.now)
+
+    def survivor():
+        yield from link.transfer(100)
+        out["survivor"] = sim.now
+
+    sim.process(victim())
+    sim.process(survivor())
+    sim.call_at(4.0, abort.trigger)
+    sim.run()
+    # survivor: 20B done by t=4 at 5 B/s, remaining 80B at 10 B/s -> t=12
+    assert out["victim"] == ("aborted", 4.0)
+    assert out["survivor"] == pytest.approx(12.0)
+    assert link.aborted_flows == 1 and link.n_flows == 0
+    # total_bytes counts DELIVERED traffic: survivor's 100B plus the 20B
+    # the victim moved before the abort
+    assert link.total_bytes == pytest.approx(120.0)
+
+
+def test_abort_on_dedicated_link_mid_flight():
+    """shared=False links honour the abort condition too (the docstring's
+    contract), crediting only the bytes delivered before the abort."""
+    sim = Sim()
+    link = sim.link(10.0, shared=False)
+    abort = sim.condition()
+    out = {}
+
+    def flow():
+        try:
+            yield from link.transfer(100, abort=abort)
+            out["ok"] = True
+        except TransferAborted:
+            out["aborted"] = sim.now
+
+    sim.process(flow())
+    sim.call_at(4.0, abort.trigger)
+    sim.run()
+    assert out == {"aborted": 4.0}
+    assert link.total_bytes == pytest.approx(40.0)  # 4s at 10 B/s delivered
+    assert link.aborted_flows == 1
+
+
+# ---------------------------------------------------------------------------
+# Topology: classification, routing, presets
+# ---------------------------------------------------------------------------
+
+def test_link_classes_and_distance():
+    topo = NetworkTopology(
+        "t", {"n0": "a", "n1": "a", "n2": "b", "n3": "c"}, "a",
+        {"intra": LinkSpec(100.0), "cross": LinkSpec(25.0),
+         "wan": LinkSpec(5.0)},
+        wan_pairs=[("a", "c")])
+    assert topo.link_class("a", "a") == "intra"
+    assert topo.link_class("a", "b") == "cross"
+    assert topo.link_class("a", "c") == "wan"
+    assert (topo.zone_distance("a", "a"), topo.zone_distance("a", "b"),
+            topo.zone_distance("a", "c")) == (0, 1, 2)
+    assert topo.registry_capacity_Bps("n1") == 100.0
+    assert topo.registry_capacity_Bps("n2") == 25.0
+    assert topo.registry_capacity_Bps("n3") == 5.0
+
+
+def test_zone_pair_shares_one_link():
+    topo = two_zone_topology(["n0", "n1", "n2", "n3"]).bind(Sim())
+    assert topo.zone("n0") == "zone-a" and topo.zone("n3") == "zone-b"
+    assert topo.registry_link("n2") is topo.registry_link("n3")
+    assert topo.registry_link("n0") is not topo.registry_link("n2")
+
+
+def test_make_topology_resolution_and_errors():
+    assert available_topologies() == ["edge_wan", "flat", "two_zone"]
+    assert {r["name"] for r in topology_entries()} == set(
+        available_topologies())
+    topo = make_topology("edge_wan", ["n0", "n1"], 100e6)
+    assert topo.name == "edge_wan"
+    assert make_topology(None, ["n0"], 1e6).name == "flat"
+    assert make_topology(topo, [], 1e6) is topo
+    with pytest.raises(ValueError, match="unknown topology"):
+        make_topology("nope", [], 1e6)
+    with pytest.raises(TypeError):
+        make_topology(42, [], 1e6)
+
+
+def test_topology_binds_to_one_sim_only():
+    topo = flat_topology(["n0"])
+    sim = Sim()
+    topo.bind(sim)
+    topo.bind(sim)  # idempotent
+    with pytest.raises(RuntimeError, match="already bound"):
+        topo.bind(Sim())
+
+
+def test_cross_zone_pull_charges_the_wan_link(tmp_path):
+    """A pull to an edge node must put its bytes on the WAN link, not the
+    core fabric; a core-node pull must not touch the WAN."""
+    from repro.cluster.cluster import Cluster
+
+    cluster = Cluster(str(tmp_path / "reg"), num_nodes=4,
+                      topology="edge_wan")
+    sim, api = cluster.sim, cluster.api
+    push = cluster.registry.push_image(
+        {"state": {"blob": np.arange(4096, dtype=np.float32)}},
+        meta={"last_msg_id": 0})
+    wan = cluster.topology.link_between("core", "edge")
+    core = cluster.topology.link_between("core", "core")
+
+    done = sim.process(api.prefetch_image("node3", push.image_id))  # edge
+    sim.run(stop_when=done)
+    assert wan.total_bytes > 0
+    wan_after_edge = wan.total_bytes
+    assert core.total_bytes == 0
+
+    done = sim.process(api.prefetch_image("node0", push.image_id))  # core
+    sim.run(stop_when=done)
+    assert core.total_bytes > 0
+    assert wan.total_bytes == wan_after_edge
+    # edge pull paid the WAN latency; its elapsed time reflects the spec
+    assert cluster.topology.link_specs["wan"].latency_s > 0
+
+
+# ---------------------------------------------------------------------------
+# flat preset: bit-for-bit backward compatibility
+# ---------------------------------------------------------------------------
+
+def test_flat_preset_reproduces_seed_numbers_bit_for_bit(tmp_path):
+    """The flat (default) topology must reproduce the pre-topology
+    single-registry-link timeline exactly — values below were captured on
+    the seed HEAD before the network layer existed."""
+    from repro.core import run_migration_experiment
+
+    r = run_migration_experiment("ms2m_cutoff", 8.0,
+                                 registry_root=str(tmp_path / "reg"), seed=0)
+    assert r.verified
+    assert r.downtime == 1.4000000000000057
+    assert r.migration_time == 75.00000024133189
+    assert r.report.phases["image_build_push"] == 17.000000121333336
+    assert r.report.phases["service_restoration"] == 21.000000120000003
+
+
+def test_flat_preset_fleet_numbers_bit_for_bit(tmp_path):
+    from repro.core import run_fleet_experiment
+
+    fleet = run_fleet_experiment(
+        4, "ms2m_precopy", 8.0, registry_root=str(tmp_path / "reg"),
+        mode="parallel", max_concurrent=4, seed=1)
+    assert fleet.all_verified
+    assert fleet.span == 143.25000096533816
+    assert fleet.max_downtime == 1.4000000000000057
+    assert fleet.total_downtime == 5.600000000000023
+    (link,) = fleet.network["links"]
+    assert link["shared"] is False  # flat = dedicated capacity
+
+
+# ---------------------------------------------------------------------------
+# Mid-flight aborts + orchestrator isolation
+# ---------------------------------------------------------------------------
+
+def _slow_shared_topology(node_names, registry_bw_Bps):
+    return NetworkTopology("slow", {n: "rack" for n in node_names}, "rack",
+                           {"intra": LinkSpec(1e5)})
+
+
+def test_node_death_aborts_inflight_prefetch(tmp_path):
+    from repro.cluster.cluster import Cluster
+
+    cluster = Cluster(str(tmp_path / "reg"), num_nodes=2,
+                      topology=_slow_shared_topology)
+    sim, api = cluster.sim, cluster.api
+    blob = np.random.default_rng(0).random(1 << 17).astype(np.float32)
+    push = cluster.registry.push_image({"state": {"blob": blob}},
+                                       meta={"last_msg_id": 0})
+    caught = {}
+
+    def prefetch():
+        try:
+            yield from api.prefetch_image("node1", push.image_id)
+            caught["ok"] = True
+        except TransferAborted as exc:
+            caught["aborted"] = (sim.now, str(exc))
+
+    # pull_base_s (5s) is charged first; the ~512KB flow then runs at
+    # 100KB/s from t=5 to ~t=10.2 — kill at t=7, mid-flight
+    sim.process(prefetch())
+    sim.call_at(7.0, lambda: api.kill_node("node1"))
+    sim.run()
+    assert "ok" not in caught
+    t_abort, msg = caught["aborted"]
+    assert t_abort == pytest.approx(7.0)
+    assert cluster.topology.registry_link("node1").aborted_flows == 1
+    # nothing landed in the dead node's layer cache
+    assert api.nodes["node1"].image_chunks == set()
+
+
+def test_revive_rearms_the_abort_condition(tmp_path):
+    from repro.cluster.cluster import Cluster
+
+    cluster = Cluster(str(tmp_path / "reg"), num_nodes=2,
+                      topology=_slow_shared_topology)
+    sim, api = cluster.sim, cluster.api
+    api.kill_node("node1")
+    api.revive_node("node1")
+    blob = np.random.default_rng(1).random(1 << 15).astype(np.float32)
+    push = cluster.registry.push_image({"state": {"blob": blob}},
+                                       meta={"last_msg_id": 0})
+    done = sim.process(api.prefetch_image("node1", push.image_id))
+    sim.run(stop_when=done)
+    assert api.nodes["node1"].image_chunks  # transfer completed normally
+
+
+def test_dead_node_transfer_fails_spec_not_fleet(tmp_path):
+    """A target node killed mid-fleet fails that spec (TransferAborted or
+    dead-node validation), never the fleet."""
+    from repro.cluster.cluster import Cluster
+    from repro.core import ClusterMigrationOrchestrator, PodMigrationSpec
+
+    cluster = Cluster(str(tmp_path / "reg"), num_nodes=3,
+                      topology=_slow_shared_topology)
+    sim, api, broker = cluster.sim, cluster.api, cluster.broker
+    stop = {"flag": False}
+    pods = {}
+    for i in range(2):
+        qname = f"orders-{i}"
+        broker.declare_queue(qname)
+
+        def producer(i=i, qname=qname):
+            while not stop["flag"]:
+                yield 0.2
+                broker.publish(qname, {"token": (i * 131) % 997})
+
+        sim.process(producer())
+
+        def boot(i=i, qname=qname):
+            pod = yield from api.create_pod(
+                f"consumer-{i}", "node0", HashConsumer(),
+                broker.queues[qname])
+            pod.start()
+            pods[i] = pod
+
+        sim.process(boot())
+    sim.run(until=5.0)
+
+    orch = ClusterMigrationOrchestrator(api, HashConsumer, max_concurrent=2)
+    specs = [
+        PodMigrationSpec(pod=pods[0], queue="orders-0", target_node="node1"),
+        PodMigrationSpec(pod=pods[1], queue="orders-1", target_node="node2"),
+    ]
+    done = orch.migrate_fleet(specs)
+    sim.call_at(sim.now + 4.0, lambda: api.kill_node("node2"))
+    sim.run(stop_when=done)
+    fleet = done.value
+    stop["flag"] = True
+    assert fleet.n_migrated == 1 and fleet.n_failed == 1
+    assert fleet.failures[0]["target_node"] == "node2"
+    assert fleet.reports[0].strategy == "ms2m_individual"
+
+
+# ---------------------------------------------------------------------------
+# Topology-aware placement
+# ---------------------------------------------------------------------------
+
+def _boot_pods(cluster, n, node="node0"):
+    sim, api, broker = cluster.sim, cluster.api, cluster.broker
+    stop = {"flag": False}
+    pods = {}
+    for i in range(n):
+        qname = f"orders-{i}"
+        broker.declare_queue(qname)
+
+        def producer(i=i, qname=qname):
+            while not stop["flag"]:
+                yield 0.2
+                broker.publish(qname, {"token": (i * 131) % 997})
+
+        sim.process(producer())
+
+        def boot(i=i, qname=qname):
+            pod = yield from api.create_pod(
+                f"consumer-{i}", node, HashConsumer(), broker.queues[qname])
+            pod.start()
+            pods[i] = pod
+
+        sim.process(boot())
+    sim.run(until=6.0)
+    return pods, stop
+
+
+def test_topology_placement_prefers_same_zone(tmp_path):
+    """Draining a zone-a node in a two_zone cluster must keep the pods in
+    zone-a (zero zone distance to both source and registry) instead of
+    round-robining half of them across the thin cross-zone trunk."""
+    from repro.cluster.cluster import Cluster
+    from repro.core import ClusterMigrationOrchestrator
+
+    cluster = Cluster(str(tmp_path / "reg"), num_nodes=4,
+                      topology="two_zone")
+    sim, api = cluster.sim, cluster.api
+    pods, stop = _boot_pods(cluster, 3)  # all on node0 (zone-a)
+
+    orch = ClusterMigrationOrchestrator(api, HashConsumer)  # default policy
+    done = orch.drain_node("node0")
+    sim.run(stop_when=done)
+    fleet = done.value
+    stop["flag"] = True
+    assert fleet.n_migrated == 3 and fleet.n_failed == 0
+    assert all(t.node.name == "node1" for t in fleet.targets)  # zone-a
+
+
+def test_round_robin_placement_still_available(tmp_path):
+    from repro.cluster.cluster import Cluster
+    from repro.core import ClusterMigrationOrchestrator
+
+    cluster = Cluster(str(tmp_path / "reg"), num_nodes=4,
+                      topology="two_zone")
+    sim, api = cluster.sim, cluster.api
+    pods, stop = _boot_pods(cluster, 3)
+
+    orch = ClusterMigrationOrchestrator(api, HashConsumer,
+                                        placement="round_robin")
+    done = orch.drain_node("node0")
+    sim.run(stop_when=done)
+    fleet = done.value
+    stop["flag"] = True
+    assert fleet.n_migrated == 3
+    # blind rotation spreads across zones, including zone-b nodes
+    assert {t.node.name for t in fleet.targets} == {"node1", "node2",
+                                                    "node3"}
+
+
+def test_topology_placement_balances_simultaneous_specs(tmp_path):
+    """In a flat topology every candidate ties on distance and link load;
+    the in-flight-target count must spread simultaneous placements
+    instead of piling every pod onto the first node by name."""
+    from repro.cluster.cluster import Cluster
+    from repro.core import ClusterMigrationOrchestrator
+
+    cluster = Cluster(str(tmp_path / "reg"), num_nodes=4)  # flat
+    sim, api = cluster.sim, cluster.api
+    pods, stop = _boot_pods(cluster, 3)
+
+    orch = ClusterMigrationOrchestrator(api, HashConsumer, max_concurrent=3)
+    done = orch.drain_node("node0")
+    sim.run(stop_when=done)
+    fleet = done.value
+    stop["flag"] = True
+    assert fleet.n_migrated == 3
+    assert {t.node.name for t in fleet.targets} == {"node1", "node2",
+                                                    "node3"}
+
+
+def test_unknown_placement_rejected(tmp_path):
+    from repro.cluster.cluster import Cluster
+    from repro.core import ClusterMigrationOrchestrator
+
+    cluster = Cluster(str(tmp_path / "reg"), num_nodes=2)
+    with pytest.raises(ValueError, match="unknown placement"):
+        ClusterMigrationOrchestrator(cluster.api, HashConsumer,
+                                     placement="nope")
+
+
+def test_auto_targets_resolved_by_placement(tmp_path):
+    """Specs with target_node=None are placed by the policy at start
+    time (and never onto the source's own node)."""
+    from repro.core import run_fleet_experiment
+
+    fleet = run_fleet_experiment(
+        3, "ms2m_individual", 8.0, registry_root=str(tmp_path / "reg"),
+        mode="parallel", max_concurrent=3, seed=0, num_nodes=4,
+        topology="two_zone", auto_targets=True)
+    assert fleet.n_migrated == 3 and fleet.all_verified
+    # sources: consumer-i on node{i}; a target may land anywhere except
+    # its own source node
+    for target in fleet.targets:
+        src_idx = int(target.name.split("-")[1])
+        assert target.node.name != f"node{src_idx}"
+        # two_zone keeps zone-a sources in zone-a (nodes 0/1)
+        if src_idx in (0, 1):
+            assert target.node.name in ("node0", "node1")
+
+
+# ---------------------------------------------------------------------------
+# Contended fleet behaviour (the sweep's bend, in miniature)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_span_bends_upward_beyond_link_saturation(tmp_path):
+    """On a shared link, pre-copy fleet span must be strictly worse at
+    max_concurrent=6 than at 2: beyond saturation the contended rounds
+    stop converging and ship strictly more wire bytes."""
+    from benchmarks.fleet_migration import (_contended_timings,
+                                            _shared_rack,
+                                            churn_blob_factory)
+    from repro.core import MigrationPolicy, run_fleet_experiment
+
+    spans, wires = {}, {}
+    for conc in (2, 6):
+        fleet = run_fleet_experiment(
+            6, "ms2m_precopy", 10.0,
+            registry_root=str(tmp_path / f"reg{conc}"), mode="parallel",
+            max_concurrent=conc, seed=0, num_nodes=4,
+            timings=_contended_timings(1e6),
+            worker_factory=churn_blob_factory, chunk_bytes=16 * 1024,
+            topology=_shared_rack,
+            policy=MigrationPolicy(precopy_max_rounds=8,
+                                   precopy_converge_ratio=2.0,
+                                   precopy_min_dirty=4))
+        assert fleet.all_verified
+        spans[conc] = fleet.span
+        wires[conc] = fleet.wire_bytes_total
+    assert spans[6] > spans[2]
+    assert wires[6] > wires[2]

@@ -245,3 +245,25 @@ def test_spec_defaults_roundtrip():
     assert spec.strategy == "ms2m_individual"
     assert spec.identity is None
     assert spec.policy is None
+    # target_node=None defers to the orchestrator's placement policy
+    assert PodMigrationSpec(pod=None, queue="q").target_node is None
+
+
+def test_fleet_experiment_rejects_single_node(tmp_path):
+    """num_nodes=1 used to silently 'migrate' every pod onto its own node
+    (source node{i % max(1, ...)} == target node0); now it is a clear
+    error, in every mode."""
+    for mode in ("parallel", "rolling", "drain"):
+        with pytest.raises(ValueError, match="num_nodes >= 2"):
+            run_fleet_experiment(
+                2, "ms2m_individual", 8.0,
+                registry_root=str(tmp_path / "reg"), mode=mode, num_nodes=1)
+
+
+def test_migration_experiment_rejects_single_node(tmp_path):
+    from repro.core import run_migration_experiment
+
+    with pytest.raises(ValueError, match="num_nodes >= 2"):
+        run_migration_experiment("ms2m_individual", 8.0,
+                                 registry_root=str(tmp_path / "reg"),
+                                 num_nodes=1)
