@@ -12,6 +12,9 @@ the full result files under results/.
   fleet    fleet_migration    — N-pod orchestrated migration (ours)
   topo     fleet_topology     — contended-topology scenarios (ours):
                                 shared-link concurrency sweep + edge WAN
+  chaos    chaos              — seeded fault schedules vs scheme (ours):
+                                >= 100 randomized schedules, rollback/retry
+                                invariants + same-seed determinism
 
 ``--quick`` is the CI smoke profile: repeats=1, the paper rates only,
 hash-fold consumers everywhere (the JAX-compute sections are skipped), and
@@ -146,6 +149,23 @@ def main(argv=None) -> int:
              f"wire={r['wire_bytes_total']}B wan={r['wan_bytes_total']}B "
              f"verified={r['all_verified']}")
     print(f"# fleet_topology done in {time.time()-t:.1f}s", file=sys.stderr)
+
+    t = time.time()
+    # chaos: >= 100 seeded fault schedules across 3 schemes, checking the
+    # crash-consistency invariant on every run (also in --quick, so CI
+    # exercises the rollback/retry machinery and uploads chaos.json)
+    from benchmarks.chaos import run_chaos
+    for r in run_chaos(quick=args.quick, out_path="results/chaos.json"):
+        if r["fault_level"] == "summary":
+            _csv("chaos/summary", 0.0,
+                 f"{r['runs']} schedules invariant_ok={r['invariant_ok']} "
+                 f"deterministic={r['deterministic']}")
+            continue
+        _csv(f"chaos/{r['scheme']}@{r['fault_level']}", r["exposure_s"],
+             f"failed={r['n_failed']}/{r['n_migrated'] + r['n_failed']} "
+             f"attempts={r['attempts']} recovered={r['recovered']} "
+             f"invariant_ok={r['invariant_ok']}")
+    print(f"# chaos done in {time.time()-t:.1f}s", file=sys.stderr)
 
     print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
     return 0

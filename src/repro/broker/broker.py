@@ -38,6 +38,10 @@ class MessageQueue:
         self._next_id = itertools.count()
         self._not_empty: Optional[Condition] = None
         self.total_published = 0
+        # broker_stall fault: a stalled queue accepts publishes but delivers
+        # nothing until unstalled (a wedged consumer channel) — no loss,
+        # only delay
+        self.stalled = False
 
     # publishing ---------------------------------------------------------
     def publish(self, payload: Any) -> Message:
@@ -48,12 +52,24 @@ class MessageQueue:
     def _push(self, msg: Message):
         self._items.append(msg)
         self.total_published += 1
-        if self._not_empty is not None:
+        if self._not_empty is not None and not self.stalled:
+            cond, self._not_empty = self._not_empty, None
+            cond.trigger()
+
+    # stalling (fault injection) ------------------------------------------
+    def stall(self):
+        self.stalled = True
+
+    def unstall(self):
+        self.stalled = False
+        if self._items and self._not_empty is not None:
             cond, self._not_empty = self._not_empty, None
             cond.trigger()
 
     # consuming ----------------------------------------------------------
     def try_get(self) -> Optional[Message]:
+        if self.stalled:
+            return None
         return self._items.popleft() if self._items else None
 
     def peek_last_id(self) -> int:
@@ -61,7 +77,7 @@ class MessageQueue:
         return self.total_published - 1 if self.total_published else -1
 
     def wait_not_empty(self) -> Condition:
-        if self._items:
+        if self._items and not self.stalled:
             done = self.sim.condition()
             done.trigger()
             return done
@@ -98,9 +114,25 @@ class Broker:
 
     # MS2M secondary queues ------------------------------------------------
     def attach_secondary(self, primary: str, name: Optional[str] = None) -> MessageQueue:
-        """Mirror all *future* publishes on ``primary`` into a new queue."""
+        """Mirror the primary's unconsumed backlog and all future
+        publishes into a new queue.
+
+        Copying the backlog is a correctness requirement, not an
+        optimization: the migration invariant is "checkpoint image plus
+        mirror covers every id", and the image only covers what the
+        *source has folded* by checkpoint time.  A source that is behind
+        (e.g. just resumed after a rolled-back migration attempt) may
+        checkpoint at a marker below ids that were already published
+        before the mirror attached — without the backlog copies those ids
+        would be in neither the image nor the mirror and the target would
+        silently lose them.  Ids the image does cover are deduplicated at
+        replay (the consumer skips ids <= the checkpoint marker), so the
+        copies are free for a caught-up source — attaching on an empty
+        backlog remains the seed behaviour, bit for bit."""
         sec_name = name or f"{primary}.secondary"
         sec = self.declare_queue(sec_name)
+        for msg in self.queues[primary]._items:  # ascending id order
+            sec._push(Message(msg.msg_id, msg.payload, msg.publish_time))
         self._mirrors[primary].append(sec_name)
         return sec
 

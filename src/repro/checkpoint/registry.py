@@ -438,3 +438,46 @@ class Registry:
     def list_images(self) -> List[str]:
         d = os.path.join(self.root, "manifests")
         return sorted(p[:-5] for p in os.listdir(d) if p.endswith(".json"))
+
+    # -- deletion / garbage collection ----------------------------------------
+    def delete_image(self, image_id: str) -> bool:
+        """Remove an image's manifest (and any tags resolving to it).
+        Chunks are shared content-addressed blobs — reclaim orphans with
+        :meth:`gc` afterwards.  Returns True if the manifest existed.
+
+        A codec-encoded delta image decodes against its parent chain, so
+        deleting a parent that *other* images still reference breaks
+        them; callers must only delete whole lineages they own (the
+        migration rollback deletes exactly the images one failed attempt
+        pushed, newest first)."""
+        path = os.path.join(self.root, "manifests", image_id + ".json")
+        with self._lock:
+            self._manifests.pop(image_id, None)
+            for tag in [t for t, i in self._tags.items() if i == image_id]:
+                del self._tags[tag]
+        if os.path.exists(path):
+            os.remove(path)
+            return True
+        return False
+
+    def gc(self) -> Tuple[int, int]:
+        """Mark-and-sweep chunk collection: delete every stored chunk no
+        remaining manifest references (the storage of half-pushed images
+        a rollback deleted).  Returns (chunks_deleted, bytes_freed)."""
+        live: set = set()
+        for image_id in self.list_images():
+            live.update(self.image_chunks(image_id))
+        chunks_root = os.path.join(self.root, "chunks")
+        deleted = freed = 0
+        for sub in sorted(os.listdir(chunks_root)):
+            subdir = os.path.join(chunks_root, sub)
+            if not os.path.isdir(subdir):
+                continue
+            for key in sorted(os.listdir(subdir)):
+                if key.endswith(".tmp") or key in live:
+                    continue
+                path = os.path.join(subdir, key)
+                freed += os.path.getsize(path)
+                os.remove(path)
+                deleted += 1
+        return deleted, freed

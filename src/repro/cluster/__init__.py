@@ -22,3 +22,11 @@ from repro.cluster.cluster import (  # noqa: F401
     Pod,
     TimingConstants,
 )
+from repro.cluster.faults import (  # noqa: F401
+    FAULT_KINDS,
+    Fault,
+    FaultInjector,
+    FaultSchedule,
+    make_schedule,
+    parse_fault,
+)

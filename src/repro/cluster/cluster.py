@@ -166,8 +166,12 @@ class Pod:
                 continue
             self.in_flight = msg
             yield self.processing_ms / 1000.0  # service time (virtual)
-            if self.deleted or self.paused:
-                # interrupted mid-service: message returns to the queue
+            if self.deleted or self.paused or not self.node.alive:
+                # interrupted mid-service (pause, delete, or the node went
+                # down under us — a soft partition must not fold state
+                # while "offline"): message returns to the queue; the
+                # id-dedup guard above makes the eventual redelivery
+                # exactly-once
                 self.queue.requeue_front(msg)
                 self.in_flight = None
                 continue
@@ -214,9 +218,33 @@ class APIServer:
         self.pods: Dict[str, Pod] = {}
         self.statefulsets = StatefulSetController()
         self.events: List[tuple] = []
+        # registry availability (fault injection): while False every
+        # node<->registry transfer fails fast with TransferAborted
+        self.registry_up = True
+        # in-flight registry transfers: (node_name, abort Condition)
+        # entries, so node deaths and registry outages can abort exactly
+        # the affected flows without leaking callbacks on long-lived
+        # conditions
+        self._live_transfers: set = set()
+        # migration-event listeners (fault injection phase triggers, test
+        # probes): called as fn(kind, t, data) for every MigrationContext
+        # emit
+        self.migration_listeners: List[Callable[[str, float, dict],
+                                               None]] = []
 
     def _log(self, kind: str, **kw):
         self.events.append((self.sim.now, kind, kw))
+
+    def notify_migration(self, kind: str, t: float, data: dict) -> None:
+        for fn in list(self.migration_listeners):
+            fn(kind, t, data)
+
+    def _abort_transfers(self, node_name: Optional[str]) -> None:
+        """Trigger the abort condition of every in-flight registry
+        transfer touching ``node_name`` (None = all of them)."""
+        for entry_node, cond in list(self._live_transfers):
+            if node_name is None or entry_node == node_name:
+                cond.trigger()
 
     # -- topology --------------------------------------------------------------
     def add_node(self, name: str) -> Node:
@@ -226,8 +254,9 @@ class APIServer:
         return node
 
     def kill_node(self, name: str):
-        """Failure injection: every pod on the node dies instantly, and
-        every in-flight link transfer touching the node aborts."""
+        """Failure injection (hard crash): every pod on the node dies
+        instantly, and every in-flight link transfer touching the node
+        aborts."""
         node = self.nodes[name]
         node.alive = False
         for pod in list(node.pods.values()):
@@ -236,7 +265,25 @@ class APIServer:
         node.pods.clear()
         if node.down is not None:
             node.down.trigger()
+        self._abort_transfers(name)
         self._log("node_killed", node=name)
+
+    def partition_node(self, name: str):
+        """Failure injection (soft/transient): the node drops off the
+        network — its pods stall in place (state intact, nothing folded
+        while "offline"; a mid-service message is requeued) and its
+        in-flight transfers abort — but unlike :meth:`kill_node` the pods
+        survive and resume on :meth:`revive_node`.  Models a network
+        partition / kernel hang / reboot-without-data-loss: the flapping
+        half of a ``node_flap`` fault."""
+        node = self.nodes[name]
+        node.alive = False
+        for pod in node.pods.values():
+            pod.wake()  # re-enter the loop so it sees node.alive == False
+        if node.down is not None:
+            node.down.trigger()
+        self._abort_transfers(name)
+        self._log("node_partitioned", node=name)
 
     def revive_node(self, name: str):
         """Bring a node back (maintenance over / transient partition healed)
@@ -248,6 +295,20 @@ class APIServer:
         for pod in list(node.pods.values()):
             pod.wake()
         self._log("node_revived", node=name)
+
+    # -- registry availability (fault injection) --------------------------------
+    def set_registry_up(self, up: bool):
+        """Registry outage toggle: while down, every push/pull/prefetch
+        fails fast with ``TransferAborted`` and in-flight registry flows
+        abort (the artifact registry is a single external dependency —
+        when it is unreachable no node can move bytes)."""
+        was = self.registry_up
+        self.registry_up = up
+        if was and not up:
+            self._abort_transfers(None)
+            self._log("registry_outage_begin")
+        elif not was and up:
+            self._log("registry_outage_end")
 
     # -- pod lifecycle (generator sub-processes) --------------------------------
     def create_pod(self, name: str, node_name: str, worker,
@@ -314,6 +375,8 @@ class APIServer:
         node = self.nodes.get(node_name) if node_name is not None else None
         if node is not None and not node.alive:
             raise TransferAborted(f"node {node_name} is dead")
+        if not self.registry_up:
+            raise TransferAborted("registry outage: transfer rejected")
         link = self.topology.registry_link(node_name)
         if not link.shared:
             dur = base_s + nbytes / link.capacity_Bps + extra_s
@@ -323,13 +386,32 @@ class APIServer:
             yield dur
             return
         yield base_s + extra_s
-        yield from link.transfer(
-            nbytes, abort=node.down if node is not None else None)
+        # re-check after the fixed costs: the node may have died or the
+        # registry gone down while they were being charged
+        if node is not None and not node.alive:
+            raise TransferAborted(f"node {node_name} is dead")
+        if not self.registry_up:
+            raise TransferAborted("registry outage: transfer rejected")
+        # per-transfer abort condition, registered so node deaths and
+        # registry outages can fan out to exactly the affected flows (and
+        # nothing accumulates on long-lived conditions)
+        abort = Condition(self.sim, "xfer-abort")
+        entry = (node_name, abort)
+        self._live_transfers.add(entry)
+        try:
+            yield from link.transfer(nbytes, abort=abort)
+        finally:
+            self._live_transfers.discard(entry)
 
     def build_and_push_image(self, checkpoint: dict, tag: str,
-                             node_name: Optional[str] = None) -> Generator:
+                             node_name: Optional[str] = None,
+                             on_pushed: Optional[Callable[[str], None]]
+                             = None) -> Generator:
         """Image Manager: OCI assembly + registry push (real bytes) over
-        the pushing node's registry link."""
+        the pushing node's registry link.  ``on_pushed`` fires with the
+        image id as soon as the registry holds it — BEFORE the transfer
+        is charged, which can abort — so rollback can garbage-collect an
+        image whose push died mid-wire."""
         t = self.timings
         yield t.image_build_s
         report = self.registry.push_image(
@@ -337,6 +419,8 @@ class APIServer:
             meta={"last_msg_id": int(checkpoint["last_msg_id"]), "tag": tag},
             tag=tag,
         )
+        if on_pushed is not None:
+            on_pushed(report.image_id)
         yield from self._registry_transfer(
             node_name, report.written_bytes, t.push_base_s,
             extra_s=self._data_path_cost_s(report))
@@ -347,11 +431,15 @@ class APIServer:
     def push_delta_image(self, checkpoint: dict, tag: str,
                          parent_image_id: str, *,
                          compression="none", exact: bool = False,
-                         node_name: Optional[str] = None) -> Generator:
+                         node_name: Optional[str] = None,
+                         on_pushed: Optional[Callable[[str], None]]
+                         = None) -> Generator:
         """Pre-copy round: delta layer vs the parent image — the wire only
         carries *encoded* chunks the registry doesn't already hold.
         ``compression`` selects the per-leaf delta codec; ``exact=True``
-        restricts it to lossless codecs (the pre-copy final flush)."""
+        restricts it to lossless codecs (the pre-copy final flush).
+        ``on_pushed`` fires with the image id before the (abortable)
+        transfer — see ``build_and_push_image``."""
         t = self.timings
         yield t.delta_build_s
         report = self.registry.push_delta(
@@ -359,6 +447,8 @@ class APIServer:
             meta={"last_msg_id": int(checkpoint["last_msg_id"]), "tag": tag},
             tag=tag, compression=compression, exact=exact,
         )
+        if on_pushed is not None:
+            on_pushed(report.image_id)
         yield from self._registry_transfer(
             node_name, report.written_bytes, t.push_base_s,
             extra_s=self._data_path_cost_s(report))
@@ -428,13 +518,20 @@ class Cluster:
     ``topology`` selects the network model: ``None`` / ``"flat"`` (the
     seed-identical uncontended registry link), another preset name
     (``"two_zone"``, ``"edge_wan"``), a ready ``NetworkTopology``, or a
-    factory ``(node_names, registry_bw_Bps) -> NetworkTopology``."""
+    factory ``(node_names, registry_bw_Bps) -> NetworkTopology``.
+
+    ``faults`` injects a deterministic failure schedule: a
+    ``repro.cluster.faults.FaultSchedule``, a list of ``Fault``s / fault
+    spec strings, or ``None`` (no faults — the default).  The schedule is
+    armed immediately: timed faults become sim processes, phase-triggered
+    faults subscribe to migration events."""
 
     def __init__(self, registry_root: str,
                  timings: Optional[TimingConstants] = None,
                  num_nodes: int = 3,
                  chunk_bytes: Optional[int] = None,
-                 topology=None):
+                 topology=None,
+                 faults=None):
         self.sim = Sim()
         self.broker = Broker(self.sim)
         self.registry = Registry(registry_root, chunk_bytes=chunk_bytes)
@@ -446,3 +543,8 @@ class Cluster:
                              self.timings, topology=self.topology)
         for name in node_names:
             self.api.add_node(name)
+        self.faults = None
+        if faults is not None:
+            from repro.cluster.faults import FaultInjector, make_schedule
+            self.faults = FaultInjector(self.api, make_schedule(faults))
+            self.faults.arm()

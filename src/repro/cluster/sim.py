@@ -215,6 +215,22 @@ class Link:
         return (self.capacity_Bps / len(self._flows) if self._flows
                 else self.capacity_Bps)
 
+    def set_capacity(self, capacity_Bps: float) -> None:
+        """Change the link's capacity mid-run (fault injection: a degraded
+        or repaired link).  Shared links settle in-flight flows at the old
+        rate first, then re-plan the next completion at the new rate, so
+        the change takes effect for every active flow at the instant it is
+        applied.  Dedicated (unshared) links price each transfer when it
+        starts, so a capacity change there affects new transfers only."""
+        if capacity_Bps <= 0:
+            raise ValueError(f"link {self.name!r} needs capacity_Bps > 0")
+        if self.shared:
+            self._settle()
+            self.capacity_Bps = float(capacity_Bps)
+            self._reschedule()
+        else:
+            self.capacity_Bps = float(capacity_Bps)
+
     # -- progressive filling ---------------------------------------------------
     def _settle(self) -> None:
         """Credit progress at the rate that held since the last event."""

@@ -15,7 +15,9 @@ from repro.core.migration import MigrationManager, MigrationReport  # noqa: F401
 from repro.core.policy import MigrationEvent, MigrationPolicy  # noqa: F401
 from repro.core.strategy import (  # noqa: F401
     MigrationContext,
+    MigrationError,
     MigrationStrategy,
+    TargetNodeLost,
     available_strategies,
     get_strategy,
     register_strategy,

@@ -28,6 +28,7 @@ from repro.core.cutoff import CutoffController
 from repro.core.policy import MigrationEvent, MigrationPolicy, MigrationReport  # noqa: F401  (re-export)
 from repro.core.strategy import (
     MigrationContext,
+    MigrationError,
     drain_condition,
     get_strategy,
     listen,
@@ -95,6 +96,13 @@ class MigrationManager:
         Callers that need failure isolation (the fleet orchestrator) drive
         this inside their own guarded process; everyone else uses
         ``migrate``.  Validation errors raise here, synchronously.
+
+        Any failure inside the strategy body (an aborted transfer, a dead
+        target node, a strategy bug) runs ``MigrationContext.rollback``
+        — source serving again, mirror torn down, target remnants and
+        half-pushed images gone — and re-raises as ``MigrationError``
+        carrying the context, so a failed attempt is a no-op for the
+        workload and the retry loop can pick up the restored source.
         """
         cls = get_strategy(strategy)
         if statefulset_identity is not None and not cls.handles_identity:
@@ -110,7 +118,21 @@ class MigrationManager:
         ctx = MigrationContext(self, source, target_node,
                                statefulset_identity,
                                policy or self.policy, strategy, self._n)
-        return cls().run(ctx)
+        return self._run_rolled_back(cls, ctx)
+
+    @staticmethod
+    def _run_rolled_back(cls, ctx: MigrationContext) -> Generator:
+        try:
+            result = yield from cls().run(ctx)
+            return result
+        except Exception as exc:  # noqa: BLE001 — every failure rolls back
+            try:
+                yield from ctx.rollback(exc)
+            except Exception as rexc:  # noqa: BLE001
+                # rollback itself failed (e.g. the source node died too);
+                # surface the original failure, keep the rollback error
+                ctx.rollback_error = rexc
+            raise MigrationError(ctx, exc) from exc
 
     def migrate(self, strategy: str, source: Pod, target_node: str,
                 statefulset_identity: Optional[str] = None,

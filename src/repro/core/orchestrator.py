@@ -45,7 +45,8 @@ from repro.cluster.sim import Condition
 from repro.core.cutoff import CutoffController
 from repro.core.migration import MigrationManager, MigrationReport
 from repro.core.policy import MigrationPolicy
-from repro.core.strategy import get_strategy, worker_state_nbytes
+from repro.core.strategy import (MigrationError, get_strategy,
+                                 worker_state_nbytes)
 
 
 @dataclasses.dataclass
@@ -198,6 +199,18 @@ class FleetReport:
         return self.raw_bytes_total / wire if wire > 0 else 1.0
 
     @property
+    def attempts(self) -> int:
+        """Migration attempts fleet-wide, successes and failures included
+        (== n_migrated + n_failed when no retries happened)."""
+        return (sum(r.attempts for r in self.reports)
+                + sum(f.get("attempts", 1) for f in self.failures))
+
+    @property
+    def n_recovered(self) -> int:
+        """Migrations that completed only after >= 1 rolled-back attempt."""
+        return sum(1 for r in self.reports if r.attempts > 1)
+
+    @property
     def all_verified(self) -> Optional[bool]:
         """True/False once every report has been verified; None while any
         report is unverified (or the fleet is empty) — 'not checked' must
@@ -235,6 +248,8 @@ class FleetReport:
             "wire_bytes_total": self.wire_bytes_total,
             "wire_reduction": round(self.wire_reduction, 3),
             "all_verified": self.all_verified,
+            "attempts": self.attempts,
+            "recovered": self.n_recovered,
             "strategies": sorted({r.strategy for r in self.reports}),
             "downtime_by_strategy": self.downtime_by_strategy(),
             "failures": [dict(f) for f in self.failures],
@@ -293,11 +308,19 @@ class ClusterMigrationOrchestrator:
         return self.sim.process(self._drive(list(specs), limit, fleet),
                                 name=f"fleet:{len(specs)}x{limit}")
 
-    def pick_target(self, pod: Pod) -> str:
+    def pick_target(self, pod: Pod, exclude: Optional[set] = None) -> str:
         """Run the placement policy over the alive nodes (excluding the
-        pod's own — migrating onto the source node is a no-op)."""
+        pod's own — migrating onto the source node is a no-op — and any
+        ``exclude`` entries: targets that already failed this spec)."""
+        exclude = exclude or set()
         candidates = [n for n in self.api.nodes.values()
-                      if n.alive and n.name != pod.node.name]
+                      if n.alive and n.name != pod.node.name
+                      and n.name not in exclude]
+        if not candidates and exclude:
+            # every fresh candidate is gone: allow excluded-but-alive
+            # nodes again (a flapped target that revived beats giving up)
+            candidates = [n for n in self.api.nodes.values()
+                          if n.alive and n.name != pod.node.name]
         if not candidates:
             raise RuntimeError(
                 f"no alive target node to place {pod.name} "
@@ -305,30 +328,81 @@ class ClusterMigrationOrchestrator:
         return self.placement(pod, candidates)
 
     def _guard(self, spec: PodMigrationSpec) -> Generator:
-        """One migration with failure isolation: any exception — spec
-        validation, a dead target node mid-fleet, an aborted transfer, a
-        strategy bug — fails this spec only, never the fleet (the
-        strategy's own cleanup still runs via its finally block)."""
-        target_node = None
-        try:
-            if spec.target_node is None:
-                # placement deferred to start time: the score sees the
-                # link load of the migrations already in flight
-                spec = dataclasses.replace(
-                    spec, target_node=self.pick_target(spec.pod))
-            target_node = spec.target_node
-            self._inflight[target_node] = (
-                self._inflight.get(target_node, 0) + 1)
-            mgr = self.manager_for(spec.queue)
-            report, target = yield from mgr.migration(
-                spec.strategy, spec.pod, spec.target_node,
-                statefulset_identity=spec.identity, policy=spec.policy)
-            return "ok", report, target
-        except Exception as exc:  # noqa: BLE001 — isolate any spec failure
-            return "failed", spec, exc
-        finally:
-            if target_node is not None:
-                self._inflight[target_node] -= 1
+        """One migration with failure isolation and crash recovery.
+
+        Any exception — spec validation, a dead target node mid-fleet, an
+        aborted transfer, a strategy bug — fails this spec only, never
+        the fleet.  Failures that went through the rollback path
+        (``MigrationError``) are retried up to ``policy.max_attempts``
+        times after ``policy.retry_backoff_s``: the spec is re-placed by
+        the placement policy with every failed target node excluded, and
+        the source handle is refreshed when the rollback re-created the
+        pod.  Validation errors never retry (they would fail identically).
+        """
+        policy = spec.policy or self.policy
+        pod = spec.pod
+        excluded: set = set()
+        attempt = 0
+        # "was the workload left rolled back?" — updated by every attempt
+        # that actually touched the workload (raised MigrationError after
+        # running rollback).  An attempt that failed before reaching the
+        # strategy (e.g. no target node left to pick) does not reset it:
+        # the source's serving state is whatever the last rollback left.
+        rolled_back = False
+        while True:
+            attempt += 1
+            # the failure entry's target describes the TERMINAL attempt —
+            # a pick_target failure has no target at all
+            target_node = None
+            try:
+                if pod is None or pod.deleted:
+                    raise RuntimeError(
+                        f"source pod for queue {spec.queue!r} is gone "
+                        "(its node died?): nothing left to migrate")
+                if spec.target_node is not None and attempt == 1:
+                    target_node = spec.target_node
+                else:
+                    # placement deferred to start time (or re-placement on
+                    # retry): the score sees the link load of the
+                    # migrations already in flight, minus failed targets
+                    target_node = self.pick_target(pod, exclude=excluded)
+                self._inflight[target_node] = (
+                    self._inflight.get(target_node, 0) + 1)
+                try:
+                    mgr = self.manager_for(spec.queue)
+                    report, target = yield from mgr.migration(
+                        spec.strategy, pod, target_node,
+                        statefulset_identity=spec.identity,
+                        policy=spec.policy)
+                finally:
+                    self._inflight[target_node] -= 1
+                report.attempts = attempt
+                return "ok", report, target
+            except Exception as exc:  # noqa: BLE001 — isolate any failure
+                retryable = isinstance(exc, MigrationError)
+                if retryable:
+                    ctx = exc.context
+                    rolled_back = ctx.rolled_back
+                    if ctx.restored_source is not None:
+                        pod = ctx.restored_source  # rollback re-created it
+                if target_node is not None:
+                    excluded.add(target_node)
+                if not retryable or attempt >= policy.max_attempts:
+                    cause = exc.cause if isinstance(exc, MigrationError) \
+                        else exc
+                    return "failed", {
+                        "pod": spec.pod.name if spec.pod else None,
+                        "queue": spec.queue,
+                        "target_node": target_node,
+                        "strategy": spec.strategy,
+                        "error": f"{type(cause).__name__}: {cause}",
+                        "attempts": attempt,
+                        "rolled_back": rolled_back,
+                        "source_pod": (pod.name if pod is not None
+                                       and not pod.deleted else None),
+                    }
+                if policy.retry_backoff_s > 0:
+                    yield policy.retry_backoff_s
 
     def _drive(self, specs: List[PodMigrationSpec], limit: int,
                fleet: FleetReport) -> Generator:
@@ -352,14 +426,7 @@ class ClusterMigrationOrchestrator:
                     fleet.reports.append(report)
                     fleet.targets.append(target)
                 else:
-                    spec, exc = payload
-                    fleet.failures.append({
-                        "pod": spec.pod.name if spec.pod else None,
-                        "queue": spec.queue,
-                        "target_node": spec.target_node,
-                        "strategy": spec.strategy,
-                        "error": f"{type(exc).__name__}: {exc}",
-                    })
+                    fleet.failures.append(payload[0])
         fleet.t_end = self.sim.now
         fleet.network = self.api.topology.stats()
         return fleet
@@ -407,6 +474,28 @@ class ClusterMigrationOrchestrator:
 # Fleet workload harness (used by tests, benchmarks and examples)
 # ---------------------------------------------------------------------------
 
+def audit_failed_spec(api: APIServer, entry: Dict[str, Any],
+                      make_worker: Callable, published: List[int], *,
+                      exact: bool = True, verify: bool = True):
+    """Record the rollback guarantee on one failure entry, in place: is
+    the source pod still serving, on an alive node, and drain-consistent
+    (its state equals the reference fold of everything it processed)?
+    Shared by the fleet and single-migration harnesses so the invariant
+    audit cannot drift between them.  Returns the source pod (or None)."""
+    from repro.core.workload import reference_fold
+
+    src = api.pods.get(entry.get("source_pod") or "")
+    entry["source_serving"] = bool(src is not None and not src.deleted
+                                   and src.node.alive and src.serving)
+    entry["source_node_alive"] = bool(src is not None and src.node.alive)
+    if src is not None and verify:
+        ref = reference_fold(make_worker, published, src.worker.last_msg_id)
+        entry["source_verified"] = bool(ref.state_equal(src.worker,
+                                                        exact=exact))
+    else:
+        entry["source_verified"] = False if src is None else None
+    return src
+
 def run_fleet_experiment(
     n_pods: int,
     strategy: str,
@@ -429,6 +518,8 @@ def run_fleet_experiment(
     topology=None,                   # preset name | NetworkTopology | factory
     placement: Union[str, Callable, None] = None,
     auto_targets: bool = False,      # let the placement policy pick targets
+    faults=None,                     # FaultSchedule | list of Fault/specs
+    allow_failures: bool = False,    # chaos runs: failures are data, not bugs
 ) -> FleetReport:
     """N queues x N Poisson producers x N consumer pods; orchestrated
     migration per ``mode``; per-pod verification against an independent
@@ -438,7 +529,15 @@ def run_fleet_experiment(
     ``topology`` selects the network model (default: the seed-identical
     ``flat`` preset); ``auto_targets=True`` leaves each spec's target to
     the orchestrator's ``placement`` policy instead of pinning the
-    reserved last node."""
+    reserved last node.
+
+    ``faults`` injects a deterministic failure schedule
+    (``repro.cluster.faults``).  With ``allow_failures=True`` a spec that
+    exhausted its retries is data rather than an assertion failure: its
+    ``FleetReport.failures`` entry gains ``source_serving`` /
+    ``source_node_alive`` / ``source_verified`` fields asserting the
+    rollback guarantee — the source pod is still serving and its state
+    still equals the reference fold of what it processed."""
     from repro.core.workload import HashConsumer, reference_fold
 
     if num_nodes < 2:
@@ -449,7 +548,8 @@ def run_fleet_experiment(
     timings = dataclasses.replace(timings or TimingConstants(),
                                   processing_ms=processing_ms)
     cluster = Cluster(registry_root, timings=timings, num_nodes=num_nodes,
-                      chunk_bytes=chunk_bytes, topology=topology)
+                      chunk_bytes=chunk_bytes, topology=topology,
+                      faults=faults)
     sim, api, broker = cluster.sim, cluster.api, cluster.broker
     make_worker = worker_factory or (lambda: HashConsumer())
     mu = 1000.0 / processing_ms
@@ -520,9 +620,10 @@ def run_fleet_experiment(
 
     sim.run(stop_when=done)
     fleet: FleetReport = done.value
-    assert not fleet.failures, f"fleet migration failed: {fleet.failures}"
+    if not allow_failures:
+        assert not fleet.failures, f"fleet migration failed: {fleet.failures}"
 
-    # settle, stop traffic, let targets drain their queues
+    # settle, stop traffic, let consumers drain their queues
     sim.run(until=sim.now + settle_time)
     stop_producing["flag"] = True
     sim.run(until=sim.now + 2.0)
@@ -531,8 +632,19 @@ def run_fleet_experiment(
     by_queue = {t.queue.name: (rep, t)
                 for rep, t in zip(fleet.reports, fleet.targets)}
     for i in range(n_pods):
-        rep, target = by_queue[f"orders-{i}"]
+        hit = by_queue.get(f"orders-{i}")
+        if hit is None:
+            continue  # failed spec: verified below against its source
+        rep, target = hit
         ref = reference_fold(make_worker, published[i],
                              target.worker.last_msg_id)
         rep.state_verified = bool(ref.state_equal(target.worker))
+
+    # -- failed specs: the rollback guarantee ---------------------------------
+    # an exhausted-retries failure must have left the source pod serving
+    # the primary queue with drain-consistent state (its fold of whatever
+    # it processed equals the reference fold — no loss, no duplication)
+    for entry in fleet.failures:
+        i = int(entry["queue"].rsplit("-", 1)[-1])
+        audit_failed_spec(api, entry, make_worker, published[i])
     return fleet

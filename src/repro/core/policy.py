@@ -51,9 +51,21 @@ class MigrationPolicy:
     adaptive_rho_max: float = 0.9    # lam/mu above this => live sync unstable
     t_replay_max: float = 45.0       # replay bound when no CutoffController
 
+    # -- crash recovery (orchestrator retry loop) -----------------------------
+    # a failed migration is rolled back (source serving again) and, when
+    # attempts remain, re-placed by the placement policy with the failed
+    # target node excluded.  max_attempts=1 == the legacy fail-once
+    # behaviour
+    max_attempts: int = 1
+    retry_backoff_s: float = 2.0     # wait between attempts
+
     def __post_init__(self):
         object.__setattr__(self, "replay_speedup",
                            max(1.0, self.replay_speedup))
+        if self.max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1")
+        if self.retry_backoff_s < 0:
+            raise ValueError("retry_backoff_s must be >= 0")
         from repro.checkpoint.codecs import validate_compression
         validate_compression(self.compression)
 
@@ -112,6 +124,9 @@ class MigrationReport:
     image_wire_bytes: int = 0
     compression: str = "none"
     state_verified: Optional[bool] = None
+    # which attempt (1-based) this report describes: > 1 means earlier
+    # attempts failed, were rolled back and retried by the orchestrator
+    attempts: int = 1
     # pre-copy telemetry: per-round raw/wire bytes / dirty-message counts
     # (index 0 = the initial full push)
     precopy_rounds: int = 0
@@ -125,6 +140,12 @@ class MigrationReport:
     @property
     def migration_time(self) -> float:
         return self.t_end - self.t_start
+
+    @property
+    def recovered(self) -> bool:
+        """True when this migration succeeded only after at least one
+        rolled-back attempt."""
+        return self.attempts > 1
 
     @property
     def wire_reduction(self) -> float:

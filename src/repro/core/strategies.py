@@ -76,8 +76,10 @@ class StopAndCopy(MigrationStrategy):
             push, ctx.broker.queues[ctx.primary_queue], replay=False)
 
         t0 = ctx.sim.now
+        ctx.ensure_target(target)  # never delete the source for a dead target
         yield from ctx.api.delete_pod(ctx.source.name)
         yield t.route_switch_s
+        ctx.ensure_target(target)
         target.start()
         ctx.phase("cutover", t0)
 
@@ -133,7 +135,8 @@ class MS2MIndividual(MigrationStrategy):
             down0 = disc.begin_cutover(ctx)
             yield t.cutover_coord_s
             # drain in-flight mirrored messages up to the source's final state
-            yield ctx.drain_condition(target, ctx.source.worker.last_msg_id)
+            yield from ctx.wait(
+                ctx.drain_condition(target, ctx.source.worker.last_msg_id))
             ctx.switch_to_primary(target)
             target.processing_ms = ctx.source.processing_ms  # service rate
             yield t.route_switch_s
@@ -187,6 +190,7 @@ class MS2MStatefulSet(MigrationStrategy):
         t = ctx.api.timings
         rep = ctx.report
         identity = ctx.identity or f"sts-{ctx.source.name}"
+        ctx.identity = identity  # rollback re-claims it for the source
         sec = ctx.attach_secondary()
         try:
             # with precopy, BOTH stop-phase costs of Fig. 4 shrink: the

@@ -48,6 +48,24 @@ from repro.core.policy import MigrationPolicy, MigrationReport
 _REGISTRY: Dict[str, Type["MigrationStrategy"]] = {}
 
 
+class TargetNodeLost(RuntimeError):
+    """The migration's target node died (crash or partition) at a point
+    where the migration could never make progress again — raised instead
+    of hanging forever on a catch-up condition a dead pod cannot satisfy."""
+
+
+class MigrationError(RuntimeError):
+    """A migration failed and its rollback ran; carries the context so
+    callers (the orchestrator retry loop) can see what the rollback
+    restored.  ``str()`` is the *cause*'s message, so failure reports
+    read the same as before the rollback layer existed."""
+
+    def __init__(self, context: "MigrationContext", cause: BaseException):
+        super().__init__(f"{type(cause).__name__}: {cause}")
+        self.context = context
+        self.cause = cause
+
+
 def register_strategy(name: str) -> Callable[[Type["MigrationStrategy"]],
                                              Type["MigrationStrategy"]]:
     """Class decorator adding a strategy to the global registry."""
@@ -182,10 +200,26 @@ class MigrationContext:
             else str(policy.compression))
         self.subs: List = []   # processed-event listeners, removed on cleanup
         self.secondary = None  # the mirror queue, once attached
+        # crash-consistency state: what rollback() needs to undo a half-run
+        # migration, and what the retry loop needs to pick up afterwards
+        self.target: Optional[Pod] = None    # the target pod, once created
+        self.pushed_images: List[str] = []   # every image this attempt pushed
+        self.switched = False      # past the commit point (route switched)
+        self.closed = False        # cleanup ran (disarms stray timers)
+        self.rolled_back = False   # rollback restored the workload
+        self.restored_source: Optional[Pod] = None
+        self.rollback_error: Optional[BaseException] = None
 
     # -- trace ----------------------------------------------------------------
     def emit(self, kind: str, **data: Any):
-        return self.report.emit(kind, self.sim.now, **data)
+        ev = self.report.emit(kind, self.sim.now, **data)
+        # fan out to control-plane listeners (fault injection phase
+        # triggers, test probes) with the migration's identity attached
+        self.api.notify_migration(
+            kind, self.sim.now,
+            {**data, "queue": self.primary_queue,
+             "strategy": self.report.strategy, "n": self.n})
+        return ev
 
     def phase(self, name: str, t0: float) -> None:
         self.emit("phase", phase=name, duration=self.sim.now - t0)
@@ -204,22 +238,131 @@ class MigrationContext:
         return drain_condition(self.sim, target, up_to_id, self.secondary,
                                self.subs)
 
+    def wait(self, cond: Condition) -> Generator:
+        """Block on ``cond``, racing it against target-node death.
+
+        Catch-up and drain conditions are satisfied by the *target pod*
+        making progress; a dead target node means they can never trigger,
+        so a migration that yielded them bare would hang forever instead
+        of failing into the rollback/retry path.  Every discipline and
+        cutover wait routes through here."""
+        node = self.api.nodes.get(self.target_node)
+        if node is None or node.down is None:
+            yield cond
+            return
+        if not node.alive:
+            raise TargetNodeLost(f"target node {self.target_node} is down")
+        if not cond.triggered:
+            yield self.sim.any_of(cond, node.down)
+        if not cond.triggered:
+            raise TargetNodeLost(
+                f"target node {self.target_node} died mid-migration")
+
+    def ensure_target(self, target: Pod) -> None:
+        """Fail fast if the target pod can no longer serve (its node died
+        or it was killed): committing a cutover onto a dead target would
+        silently lose the workload."""
+        if target.deleted or not target.node.alive:
+            raise TargetNodeLost(
+                f"target pod {target.name} lost (node "
+                f"{target.node.name} {'dead' if not target.node.alive else 'ok'})")
+
     def switch_to_primary(self, target: Pod) -> None:
+        self.ensure_target(target)  # last check before the commit point
         self.broker.detach_secondary(self.primary_queue, self.secondary.name)
         target.queue = self.broker.queues[self.primary_queue]
         target.wake()  # unblock if it was waiting on the secondary
+        self.switched = True
 
     def cleanup(self) -> None:
         """Always-run teardown: deregister listeners (repeated migrations
         of one lineage must not fire stale checks) and detach the mirror
         if the migration died before cutover (an orphan mirror would
-        double-buffer every future publish into a queue nothing drains)."""
+        double-buffer every future publish into a queue nothing drains).
+        Sets ``closed`` so stray timers (a cutoff deadline armed for this
+        migration) can tell the migration is over and must not touch the
+        source again."""
+        self.closed = True
         unlisten_all(self.subs)
         if (self.secondary is not None
                 and self.broker.is_mirrored(self.primary_queue,
                                             self.secondary.name)):
             self.broker.detach_secondary(self.primary_queue,
                                          self.secondary.name)
+
+    def rollback(self, cause: BaseException) -> Generator:
+        """Transactional abort: leave the workload as if this attempt had
+        never started.  Steps (all idempotent):
+
+          1. listeners deregistered, the cutoff/sync mirror torn down
+             (``cleanup``);
+          2. the half-built target pod deleted — releasing a StatefulSet
+             identity it claimed; a pod that died with its node leaves
+             only identity bookkeeping to clear;
+          3. every image this attempt pushed deleted from the registry
+             and orphaned chunks garbage-collected (half-pushed delta
+             lineages do not leak storage);
+          4. the source serving again: resumed in place when it was only
+             paused, or re-created from its still-live worker object —
+             re-claiming its identity — when the strategy had already
+             deleted it (the stop-then-replay paths).
+
+        Sets ``rolled_back`` when the source is provably serving again.
+        A dead source node leaves it False: there is nothing to roll back
+        *to* — that is the journal/heartbeat recovery path's job, not the
+        migration layer's."""
+        self.emit("rollback_begin", cause=f"{type(cause).__name__}: {cause}")
+        self.cleanup()
+        api, source = self.api, self.source
+        # -- target remnants --------------------------------------------------
+        tgt = self.target
+        if tgt is not None and not self.switched:
+            identity = (self.identity
+                        if self.identity is not None
+                        and api.statefulsets.identities.get(self.identity)
+                        == tgt.name else None)
+            if tgt.name in api.pods:
+                yield from api.delete_pod(tgt.name,
+                                          statefulset_identity=identity,
+                                          graceful=False)
+            elif identity is not None:
+                # the pod died with its node; only the claim survives
+                api.statefulsets.release(identity)
+            self.target = None
+        # -- registry garbage -------------------------------------------------
+        if self.pushed_images:
+            removed = sum(api.registry.delete_image(i)
+                          for i in reversed(self.pushed_images))
+            chunks, freed = api.registry.gc()
+            self.emit("rollback_gc", images=removed, chunks=chunks,
+                      bytes_freed=freed)
+            self.pushed_images.clear()
+        # -- source back in service -------------------------------------------
+        if not source.deleted:
+            if source.paused:
+                source.resume()
+            self.restored_source = source
+            self.rolled_back = True
+        elif source.node.alive and source.name not in api.pods:
+            # the strategy deleted the source before the failure (the
+            # stop-then-replay paths); its worker object still holds the
+            # full state, so re-create the pod around it
+            identity = None
+            if (self.identity is not None
+                    and api.statefulsets.identities.get(self.identity)
+                    is None):
+                identity = self.identity
+            pod = yield from api.create_pod(
+                source.name, source.node.name, source.worker,
+                self.broker.queues[self.primary_queue],
+                statefulset_identity=identity,
+                processing_ms=source.processing_ms)
+            pod.start()
+            self.restored_source = pod
+            self.rolled_back = True
+        self.emit("rollback_end", rolled_back=self.rolled_back,
+                  restored_source=(self.restored_source.name
+                                   if self.restored_source else None))
 
     # -- transfer phase -------------------------------------------------------
     def transfer(self, use_precopy: bool, pre_tag: str,
@@ -240,8 +383,12 @@ class MigrationContext:
         self.phase("checkpoint", t0)
 
         t0 = self.sim.now
+        # the image id is recorded via on_pushed BEFORE the wire transfer,
+        # which can abort: a half-pushed image must still be reachable by
+        # rollback's garbage collection
         push = yield from self.api.build_and_push_image(
-            ckpt, tag, node_name=self.source.node.name)
+            ckpt, tag, node_name=self.source.node.name,
+            on_pushed=self.pushed_images.append)
         rep.image_id = push.image_id
         rep.image_written_bytes = push.written_bytes
         rep.image_deduped_bytes = push.deduped_bytes
@@ -265,8 +412,10 @@ class MigrationContext:
         target = yield from self.api.create_pod(
             f"{self.source.name}-target-{self.n}", self.target_node, worker,
             queue, statefulset_identity=identity, processing_ms=proc_ms)
+        self.target = target  # rollback deletes a half-restored target
         yield from self.api.pull_and_restore(push.image_id, worker,
                                              node_name=self.target_node)
+        self.ensure_target(target)  # a flat-link pull ignores node death
         self.phase("service_restoration", t0)
         return target
 
@@ -392,7 +541,8 @@ class IterativePrecopyTransfer(TransferEngine):
             t0 = sim.now
             delta = yield from api.push_delta_image(
                 ckpt, f"{tag}-r{rep.precopy_rounds + 1}", push.image_id,
-                compression=pol.compression, node_name=source.node.name)
+                compression=pol.compression, node_name=source.node.name,
+                on_pushed=ctx.pushed_images.append)
             yield from api.prefetch_image(ctx.target_node, delta.image_id)
             ctx.phase("precopy_delta", t0)
             push = delta
@@ -422,7 +572,8 @@ class IterativePrecopyTransfer(TransferEngine):
             flush = yield from api.push_delta_image(
                 ckpt, f"{tag}-exact", push.image_id,
                 compression=pol.compression, exact=True,
-                node_name=source.node.name)
+                node_name=source.node.name,
+                on_pushed=ctx.pushed_images.append)
             yield from api.prefetch_image(ctx.target_node, flush.image_id)
             ctx.phase("precopy_exact_flush", t0)
             push = flush
@@ -474,7 +625,7 @@ class LiveSyncCatchup(CatchupDiscipline):
     has seen everything the source has (paper Fig. 2)."""
 
     def catchup(self, ctx: MigrationContext, target: Pod) -> Generator:
-        yield ctx.sync_condition(target)
+        yield from ctx.wait(ctx.sync_condition(target))
 
 
 class ThresholdCutoffCatchup(CatchupDiscipline):
@@ -492,8 +643,10 @@ class ThresholdCutoffCatchup(CatchupDiscipline):
         source, state = ctx.source, self.state
 
         def _fire():
-            if (not state["fired"] and not source.paused
+            if (not ctx.closed and not state["fired"] and not source.paused
                     and not source.deleted):
+                # ctx.closed guard: after a rollback the source is serving
+                # again and a stale deadline must not pause it
                 state["fired"] = True
                 state["pause_time"] = ctx.sim.now
                 source.pause()
@@ -508,13 +661,13 @@ class ThresholdCutoffCatchup(CatchupDiscipline):
         if self.state["fired"]:
             # source already stopped (deadline expired mid-transfer):
             # bounded replay to the frozen cutoff id
-            yield ctx.drain_condition(target, self.state["id"])
+            yield from ctx.wait(ctx.drain_condition(target, self.state["id"]))
             return
         synced = ctx.sync_condition(target)
-        yield ctx.sim.any_of(synced, self.fired_cond)
+        yield from ctx.wait(ctx.sim.any_of(synced, self.fired_cond))
         if self.state["fired"] and not synced.triggered:
             # fired mid-catch-up: bounded drain to the frozen id
-            yield ctx.drain_condition(target, self.state["id"])
+            yield from ctx.wait(ctx.drain_condition(target, self.state["id"]))
 
     def begin_cutover(self, ctx: MigrationContext) -> float:
         if self.state["fired"]:
@@ -533,7 +686,7 @@ class StopThenReplayCatchup(CatchupDiscipline):
         self.up_to_id = up_to_id
 
     def catchup(self, ctx: MigrationContext, target: Pod) -> Generator:
-        yield ctx.drain_condition(target, self.up_to_id)
+        yield from ctx.wait(ctx.drain_condition(target, self.up_to_id))
 
 
 # ---------------------------------------------------------------------------

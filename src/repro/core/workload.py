@@ -69,7 +69,7 @@ class HashConsumer:
 
 @dataclasses.dataclass
 class ExperimentResult:
-    report: MigrationReport
+    report: Optional[MigrationReport]
     verified: bool
     published: int
     processed_by_target: int
@@ -77,8 +77,25 @@ class ExperimentResult:
     mu: float
     downtime: float
     migration_time: float
+    # chaos runs (faults + allow_failure=True): a migration that exhausted
+    # its retries has report=None and carries the rollback audit instead
+    failed: bool = False
+    failure: Optional[Dict[str, Any]] = None
 
     def row(self) -> Dict[str, Any]:
+        if self.report is None:
+            f = self.failure or {}
+            return {
+                "strategy": f.get("strategy"),
+                "lam": self.lam,
+                "mu": self.mu,
+                "failed": True,
+                "error": f.get("error"),
+                "attempts": f.get("attempts"),
+                "rolled_back": f.get("rolled_back"),
+                "source_serving": f.get("source_serving"),
+                "source_verified": f.get("source_verified"),
+            }
         return {
             "strategy": self.report.strategy,
             "lam": self.lam,
@@ -89,6 +106,7 @@ class ExperimentResult:
             "cutoff_fired": self.report.cutoff_fired,
             "verified": self.verified,
             "state_verified": self.report.state_verified,
+            "attempts": self.report.attempts,
             "phases": {k: round(v, 3) for k, v in self.report.phases.items()},
             "image_written_bytes": self.report.image_written_bytes,
             "image_deduped_bytes": self.report.image_deduped_bytes,
@@ -170,6 +188,8 @@ def run_migration_experiment(
     policy: Optional[MigrationPolicy] = None,
     topology=None,                   # preset name | NetworkTopology | factory
     num_nodes: int = 3,
+    faults=None,                     # FaultSchedule | list of Fault/specs
+    allow_failure: bool = False,     # exhausted retries => result, not raise
     # legacy knobs, folded into the policy (None = unset):
     batched_replay: Optional[bool] = None,
     replay_speedup: Optional[float] = None,
@@ -185,7 +205,8 @@ def run_migration_experiment(
             f"run_migration_experiment needs num_nodes >= 2 (got "
             f"{num_nodes}): the migration target must be a different node")
     cluster = Cluster(registry_root, timings=timings, num_nodes=num_nodes,
-                      chunk_bytes=chunk_bytes, topology=topology)
+                      chunk_bytes=chunk_bytes, topology=topology,
+                      faults=faults)
     sim, api, broker = cluster.sim, cluster.api, cluster.broker
     primary = broker.declare_queue("orders")
 
@@ -228,11 +249,46 @@ def run_migration_experiment(
     source = source_holder["pod"]
 
     # -- migration -------------------------------------------------------------
-    mgr = MigrationManager(api, make_worker, "orders", cutoff=cutoff,
-                           policy=pol)
-    done = mgr.migrate(strategy, source, "node1")
-    sim.run(stop_when=done)
-    report, target = done.value
+    # the direct manager path is kept bit-identical for fault-free
+    # single-attempt runs; fault/retry runs go through the orchestrator's
+    # guarded retry loop (rollback + re-placement excluding failed targets)
+    use_guard = faults is not None or pol.max_attempts > 1 or allow_failure
+    if not use_guard:
+        mgr = MigrationManager(api, make_worker, "orders", cutoff=cutoff,
+                               policy=pol)
+        done = mgr.migrate(strategy, source, "node1")
+        sim.run(stop_when=done)
+        report, target = done.value
+    else:
+        from repro.core.orchestrator import (ClusterMigrationOrchestrator,
+                                             PodMigrationSpec)
+        orch = ClusterMigrationOrchestrator(
+            api, make_worker, max_concurrent=1,
+            cutoff_factory=lambda: cutoff, policy=pol)
+        done = orch.migrate_fleet([PodMigrationSpec(
+            pod=source, queue="orders", target_node="node1",
+            strategy=strategy)])
+        sim.run(stop_when=done)
+        fleet = done.value
+        if fleet.failures:
+            entry = fleet.failures[0]
+            if not allow_failure:
+                raise RuntimeError(f"migration failed after "
+                                   f"{entry['attempts']} attempt(s): "
+                                   f"{entry['error']}")
+            sim.run(until=sim.now + settle_time)
+            stop_producing["flag"] = True
+            sim.run(until=sim.now + 2.0)
+            from repro.core.orchestrator import audit_failed_spec
+            src = audit_failed_spec(api, entry, make_worker, published,
+                                    exact=not pol.batched_replay,
+                                    verify=verify)
+            return ExperimentResult(
+                report=None, verified=False, published=len(published),
+                processed_by_target=(src.worker.n_processed if src else 0),
+                lam=message_rate, mu=mu, downtime=0.0, migration_time=0.0,
+                failed=True, failure=entry)
+        report, target = fleet.reports[0], fleet.targets[0]
 
     # -- settle + stop ----------------------------------------------------------
     sim.run(until=sim.now + settle_time)

@@ -19,7 +19,8 @@ import importlib
 import json
 import tempfile
 
-from repro.cluster import available_topologies, topology_entries
+from repro.cluster import (FAULT_KINDS, available_topologies, parse_fault,
+                           topology_entries)
 from repro.core import (
     MigrationPolicy,
     available_strategies,
@@ -91,6 +92,17 @@ def main(argv=None) -> int:
                     help="delta codec for pre-copy rounds (wire bytes)")
     ap.add_argument("--events", action="store_true",
                     help="also print the structured MigrationEvent trace")
+    ap.add_argument("--fault", action="append", default=[],
+                    metavar="KIND@TRIGGER[,k=v,...]",
+                    help="inject a fault (repeatable), e.g. "
+                         "node_flap@12,node=node1,duration=5 or "
+                         "registry_outage@precopy_round:1,duration=8; "
+                         "kinds: " + ", ".join(FAULT_KINDS))
+    ap.add_argument("--max-attempts", type=int, default=1,
+                    help="migration attempts before giving up (failed "
+                         "attempts are rolled back: source serving again)")
+    ap.add_argument("--retry-backoff", type=float, default=2.0,
+                    help="seconds between migration attempts")
     args = ap.parse_args(argv)
 
     if args.list_strategies:
@@ -115,18 +127,29 @@ def main(argv=None) -> int:
         precopy_max_rounds=args.precopy_max_rounds,
         compression=args.compression,
         t_replay_max=args.t_replay_max,
+        max_attempts=args.max_attempts,
+        retry_backoff_s=args.retry_backoff,
     )
+    faults = [parse_fault(spec) for spec in args.fault] or None
     registry = args.registry or tempfile.mkdtemp(prefix="repro-registry-")
     r = run_migration_experiment(
         args.strategy, args.rate, registry_root=registry,
         processing_ms=args.processing_ms, t_replay_max=args.t_replay_max,
         seed=args.seed, worker_factory=worker_factory, policy=policy,
-        topology=args.topology)
+        topology=args.topology, faults=faults,
+        allow_failure=faults is not None)
     print(json.dumps(r.row(), indent=2))
+    if r.failed:
+        print(f"[migrate] FAILED after {r.failure.get('attempts')} "
+              f"attempt(s): {r.failure.get('error')} "
+              f"(rolled back: source_serving="
+              f"{r.failure.get('source_serving')})")
+        return 1
     if args.events:
         print(json.dumps(r.report.event_rows(), indent=2))
     print(f"[migrate] downtime={r.downtime:.2f}s "
-          f"migration={r.migration_time:.2f}s verified={r.verified}")
+          f"migration={r.migration_time:.2f}s verified={r.verified} "
+          f"attempts={r.report.attempts}")
     return 0 if r.verified else 1
 
 

@@ -94,17 +94,36 @@ def test_sub_process_return_values():
 def test_secondary_queue_mirrors_from_attach_point():
     sim = Sim()
     broker = Broker(sim)
-    broker.declare_queue("q")
+    q = broker.declare_queue("q")
     broker.publish("q", {"n": 0})
+    q.try_get()  # message 0 was CONSUMED before the attach
     sec = broker.attach_secondary("q")
     broker.publish("q", {"n": 1})
     broker.publish("q", {"n": 2})
-    assert sec.depth() == 2  # message 0 predates the attach
+    assert sec.depth() == 2  # consumed message 0 is not mirrored
     m1 = sec.try_get()
     assert m1.msg_id == 1  # ids preserved across the mirror
     broker.detach_secondary("q", sec.name)
     broker.publish("q", {"n": 3})
     assert sec.depth() == 1  # no mirroring after detach
+
+
+def test_secondary_queue_mirrors_unconsumed_backlog():
+    """The accumulation buffer must cover every id the consumer has not
+    folded yet: unconsumed backlog present at attach time is copied into
+    the mirror (in id order, ahead of post-attach publishes).  Without
+    this, a behind-the-queue source (e.g. one just resumed by a migration
+    rollback) checkpoints below the backlog ids and the target loses
+    them — neither image nor mirror would hold them."""
+    sim = Sim()
+    broker = Broker(sim)
+    broker.declare_queue("q")
+    broker.publish("q", {"n": 0})
+    broker.publish("q", {"n": 1})  # both still unconsumed
+    sec = broker.attach_secondary("q")
+    broker.publish("q", {"n": 2})
+    assert sec.depth() == 3
+    assert [sec.try_get().msg_id for _ in range(3)] == [0, 1, 2]
 
 
 def test_queue_ids_monotone():

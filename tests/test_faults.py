@@ -1,0 +1,457 @@
+"""Fault-injection subsystem and crash-consistent rollback/retry.
+
+Covers the FaultSchedule grammar and seeded generation, each fault kind's
+cluster-level effect, the MigrationContext.rollback guarantee (source
+serving, mirror torn down, registry garbage collected) and the
+orchestrator's retry loop (re-placement with failed targets excluded).
+"""
+import json
+import tempfile
+
+import pytest
+
+from repro.cluster import Cluster, Fault, FaultSchedule, parse_fault
+from repro.cluster.sim import TransferAborted
+from repro.core import (
+    HashConsumer,
+    MigrationError,
+    MigrationManager,
+    MigrationPolicy,
+    run_fleet_experiment,
+    run_migration_experiment,
+)
+
+
+# ---------------------------------------------------------------------------
+# Schedule grammar / generation
+# ---------------------------------------------------------------------------
+
+def test_parse_fault_grammar():
+    f = parse_fault("node_flap@12,node=node1,duration=5")
+    assert (f.kind, f.at, f.node, f.duration) == ("node_flap", 12.0,
+                                                  "node1", 5.0)
+    f = parse_fault("registry_outage@precopy_round:1,duration=8")
+    assert f.at is None and f.phase == "precopy_round:1" and f.duration == 8.0
+    f = parse_fault("registry_outage@phase:checkpoint,duration=2,after=1.5")
+    assert f.phase == "checkpoint" and f.after == 1.5
+    f = parse_fault("link_degrade@20,node=node0,duration=10,factor=0.1")
+    assert f.factor == 0.1
+    f = parse_fault("broker_stall@15,queue=orders,duration=4")
+    assert f.queue == "orders"
+
+
+@pytest.mark.parametrize("bad", [
+    "no_at_sign",
+    "unknown_kind@5",
+    "node_crash@5",                      # node kinds need node=
+    "node_flap@5,node=n0",               # flap needs duration
+    "link_degrade@5,node=n0,duration=3,factor=1.5",  # factor in (0,1)
+    "node_crash@5,node=n0,bogus=1",      # unknown key
+    "node_crash@5,node=n0,phase=checkpoint",  # at AND phase
+    "registry_outage@precopy_round:two,duration=3",  # round not an int
+])
+def test_parse_fault_rejects(bad):
+    with pytest.raises(ValueError):
+        parse_fault(bad)
+
+
+def test_random_schedule_is_seed_deterministic():
+    kw = dict(n_faults=5, t_window=(5.0, 50.0), nodes=("node1", "node2"),
+              queues=("orders",))
+    a = FaultSchedule.random(7, **kw)
+    b = FaultSchedule.random(7, **kw)
+    c = FaultSchedule.random(8, **kw)
+    assert a.rows() == b.rows()
+    assert a.rows() != c.rows()
+    assert len(a) == 5
+    # timed faults come out sorted by fire time
+    times = [f.at for f in a]
+    assert times == sorted(times)
+
+
+def test_random_schedule_skips_kinds_without_candidates():
+    sched = FaultSchedule.random(3, n_faults=10, nodes=(), queues=())
+    assert all(f.kind == "registry_outage" for f in sched)
+
+
+# ---------------------------------------------------------------------------
+# Fault kinds at the cluster level
+# ---------------------------------------------------------------------------
+
+def _consumer_cluster(root, faults=None, num_nodes=2):
+    cluster = Cluster(root, num_nodes=num_nodes, faults=faults)
+    sim, api, broker = cluster.sim, cluster.api, cluster.broker
+    q = broker.declare_queue("orders")
+    worker = HashConsumer()
+    holder = {}
+
+    def boot():
+        pod = yield from api.create_pod("c0", "node0", worker, q)
+        pod.start()
+        holder["pod"] = pod
+
+    sim.process(boot())
+    tokens = []
+
+    def producer():
+        i = 0
+        while sim.now < 30.0:
+            yield 0.2
+            broker.publish("orders", {"token": (i * 37) % 997})
+            tokens.append((i * 37) % 997)
+            i += 1
+
+    sim.process(producer())
+    return cluster, holder, tokens, worker
+
+
+def test_broker_stall_delays_but_never_loses(tmp_path):
+    from repro.core.workload import reference_fold
+
+    faults = [Fault("broker_stall", at=10.0, queue="orders", duration=5.0)]
+    cluster, holder, tokens, worker = _consumer_cluster(
+        str(tmp_path / "reg"), faults=faults)
+    sim = cluster.sim
+    sim.run(until=12.0)
+    depth_mid = cluster.broker.queues["orders"].depth()
+    assert depth_mid > 5  # stalled: publishes pile up
+    sim.run(until=40.0)
+    assert cluster.broker.queues["orders"].depth() == 0  # drained after
+    ref = reference_fold(HashConsumer, tokens, worker.last_msg_id)
+    assert ref.state_equal(worker)  # exactly-once despite the stall
+
+
+def test_registry_outage_rejects_transfers_and_recovers(tmp_path):
+    cluster = Cluster(str(tmp_path / "reg"), num_nodes=2,
+                      faults=[Fault("registry_outage", at=5.0,
+                                    duration=10.0)])
+    sim, api = cluster.sim, cluster.api
+    results = {}
+
+    def pusher(name, t0):
+        yield t0
+        w = HashConsumer()
+        ckpt = {"state": w.state_tree(), "last_msg_id": -1}
+        try:
+            yield from api.build_and_push_image(ckpt, name)
+            results[name] = "ok"
+        except TransferAborted as exc:
+            results[name] = str(exc)
+
+    sim.process(pusher("early", 0.0))    # build 11s -> push at 11 (outage
+    sim.process(pusher("during", 1.0))   # ended at 15? no: build lands at 12)
+    sim.process(pusher("late", 16.0))    # after the outage: succeeds
+    sim.run(until=60.0)
+    assert "outage" in results["early"]   # push attempted at t=11 < 15
+    assert "outage" in results["during"]
+    assert results["late"] == "ok"
+
+
+def test_link_degrade_scales_and_restores_capacity(tmp_path):
+    cluster = Cluster(str(tmp_path / "reg"), num_nodes=2,
+                      faults=[Fault("link_degrade", at=2.0, node="node0",
+                                    duration=3.0, factor=0.5)])
+    sim = cluster.sim
+    link = cluster.topology.registry_link("node0")
+    base = link.capacity_Bps
+    sim.run(until=3.0)
+    assert link.capacity_Bps == base * 0.5
+    sim.run(until=6.0)
+    assert link.capacity_Bps == base
+
+
+def test_overlapping_link_degrades_compose_and_restore(tmp_path):
+    """Two overlapping degrade windows on one link compose
+    multiplicatively and the base capacity is restored bit-exactly when
+    the LAST window ends (a stale-capture restore left the link degraded
+    forever)."""
+    cluster = Cluster(
+        str(tmp_path / "reg"), num_nodes=2,
+        faults=[Fault("link_degrade", at=2.0, node="node0", duration=6.0,
+                      factor=0.25),
+                Fault("link_degrade", at=4.0, node="node0", duration=10.0,
+                      factor=0.5)])
+    sim = cluster.sim
+    link = cluster.topology.registry_link("node0")
+    base = link.capacity_Bps
+    sim.run(until=3.0)
+    assert link.capacity_Bps == base * 0.25
+    sim.run(until=5.0)
+    assert link.capacity_Bps == base * 0.25 * 0.5
+    sim.run(until=9.0)   # first window ended at t=8
+    assert link.capacity_Bps == base * 0.125 / 0.25
+    sim.run(until=15.0)  # second window ended at t=14: bit-exact base
+    assert link.capacity_Bps == base
+
+
+def test_aborted_push_is_still_garbage_collected(tmp_path):
+    """An image whose registry write landed but whose wire transfer
+    aborted (registry outage during the push) is tracked before the
+    transfer and rollback still deletes it — half-pushed images must not
+    leak storage."""
+    # outage window 28..45 covers the first push (image build ends ~29)
+    faults = [Fault("registry_outage", at=28.0, duration=17.0)]
+    cluster, holder, tokens, worker = _consumer_cluster(
+        str(tmp_path / "reg"), faults=faults, num_nodes=2)
+    sim, api = cluster.sim, cluster.api
+    sim.run(until=10.0)
+    mgr = MigrationManager(api, HashConsumer, "orders")
+    mgr.migrate("ms2m_individual", holder["pod"], "node1")
+    with pytest.raises(MigrationError) as ei:
+        sim.run(until=200.0)
+    ctx = ei.value.context
+    assert ctx.rolled_back
+    # the manifest was written before the aborted transfer, and rollback
+    # deleted it anyway: nothing left in the registry
+    assert cluster.registry.list_images() == []
+    assert cluster.registry.gc() == (0, 0)
+
+
+def test_phase_triggered_fault_fires_on_matching_event(tmp_path):
+    faults = [Fault("registry_outage", phase="checkpoint", duration=12.0)]
+    r = run_migration_experiment(
+        "ms2m_individual", 6.0, registry_root=str(tmp_path / "reg"),
+        seed=5, faults=faults, allow_failure=True,
+        policy=MigrationPolicy(max_attempts=3, retry_backoff_s=1.0))
+    # the checkpoint phase ends at t=18 and triggers the outage; the
+    # window 18..30 covers the first push (image build ends ~29), so
+    # attempt 1 aborts and the retry makes it through after the window
+    assert r.report is not None and r.report.attempts >= 2
+    assert r.verified
+
+
+def test_permanent_crash_during_flap_window_stays_dead(tmp_path):
+    """A permanent node_crash landing inside a flap's partition window
+    must kill the node for good: the flap's scheduled revive cannot
+    resurrect it (and its pods die at crash time, not at revive time)."""
+    cluster = Cluster(
+        str(tmp_path / "reg"), num_nodes=2,
+        faults=[Fault("node_flap", at=4.0, node="node1", duration=10.0),
+                Fault("node_crash", at=8.0, node="node1")])
+    sim, api = cluster.sim, cluster.api
+    q = cluster.broker.declare_queue("q")
+    holder = {}
+
+    def boot():
+        pod = yield from api.create_pod("p1", "node1", HashConsumer(), q)
+        pod.start()
+        holder["pod"] = pod
+
+    sim.process(boot())
+    sim.run(until=6.0)
+    assert not holder["pod"].deleted      # flap only stalls the pod
+    sim.run(until=9.0)
+    assert holder["pod"].deleted          # the crash killed it
+    sim.run(until=30.0)                   # past the flap's revive time
+    assert not api.nodes["node1"].alive   # permanent means permanent
+    actions = [e["action"] for e in cluster.faults.log]
+    assert actions == ["fired", "fired", "revive_superseded_by_crash"]
+
+
+def test_permanent_crash_over_timed_crash_stays_dead(tmp_path):
+    """A permanent crash fired while the node is already dead from a
+    TIMED crash still declares permanence: the timed crash's scheduled
+    revive must not resurrect the node."""
+    cluster = Cluster(
+        str(tmp_path / "reg"), num_nodes=2,
+        faults=[Fault("node_crash", at=1.0, node="node1", duration=5.0),
+                Fault("node_crash", at=3.0, node="node1")])
+    cluster.sim.run(until=20.0)
+    assert not cluster.api.nodes["node1"].alive
+    actions = [e["action"] for e in cluster.faults.log]
+    assert actions == ["fired", "skipped", "revive_superseded_by_crash"]
+
+
+def test_link_degrade_unknown_node_is_skipped(tmp_path):
+    """A typo'd node name must not silently degrade the registry's own
+    intra-zone link (zone() falls back to the registry zone)."""
+    cluster = Cluster(
+        str(tmp_path / "reg"), num_nodes=2,
+        faults=[Fault("link_degrade", at=2.0, node="nodeX", duration=5.0,
+                      factor=0.1)])
+    base = cluster.topology.registry_link("node0").capacity_Bps
+    cluster.sim.run(until=4.0)
+    assert cluster.topology.registry_link("node0").capacity_Bps == base
+    assert [e["action"] for e in cluster.faults.log] == ["skipped"]
+
+
+def test_rolled_back_survives_pick_target_exhaustion(tmp_path):
+    """Attempt 1 rolls back cleanly, then every other target node dies so
+    the retry cannot even pick a target: the failure entry must still
+    report rolled_back=True (the workload WAS left rolled back) with the
+    source serving — the invariant keys on workload state, not on which
+    attempt happened to be terminal."""
+    faults = [Fault("node_crash", at=12.0, node="node1"),
+              Fault("node_crash", at=14.0, node="node2")]
+    r = run_migration_experiment(
+        "ms2m_precopy", 8.0, registry_root=str(tmp_path / "reg"), seed=3,
+        faults=faults, allow_failure=True,
+        policy=MigrationPolicy(max_attempts=3, retry_backoff_s=1.0))
+    assert r.failed
+    f = r.failure
+    assert f["rolled_back"] and f["source_serving"] and f["source_verified"]
+    assert f["target_node"] is None  # the terminal attempt picked none
+
+
+def test_injector_log_records_firings(tmp_path):
+    cluster = Cluster(str(tmp_path / "reg"), num_nodes=2,
+                      faults=[Fault("node_flap", at=3.0, node="node1",
+                                    duration=2.0)])
+    cluster.sim.run(until=10.0)
+    actions = [(e["action"], e["kind"]) for e in cluster.faults.log]
+    assert actions == [("fired", "node_flap"), ("revived", "node_flap")]
+    assert cluster.api.nodes["node1"].alive
+
+
+# ---------------------------------------------------------------------------
+# Rollback guarantee (single migration)
+# ---------------------------------------------------------------------------
+
+def test_failed_migration_rolls_back_to_a_noop(tmp_path):
+    """Kill the target node mid-restore: the attempt must be a no-op —
+    source serving, no mirror, no target remnants, no leaked images."""
+    faults = [Fault("node_crash", at=40.0, node="node1")]
+    cluster, holder, tokens, worker = _consumer_cluster(
+        str(tmp_path / "reg"), faults=faults, num_nodes=2)
+    sim, api, broker = cluster.sim, cluster.api, cluster.broker
+    sim.run(until=10.0)
+    source = holder["pod"]
+    mgr = MigrationManager(api, HashConsumer, "orders")
+    mgr.migrate("ms2m_individual", source, "node1")
+    with pytest.raises(MigrationError) as ei:
+        sim.run(until=200.0)
+    ctx = ei.value.context
+    assert ctx.rolled_back
+    sim.run(until=200.0)  # let the restored source keep serving
+
+    # source serving again, from the primary queue
+    assert not source.deleted and source.serving and not source.paused
+    assert source.queue is broker.queues["orders"]
+    # no mirror left attached (no double-buffering of future publishes)
+    assert broker._mirrors["orders"] == []
+    # no target remnants in the control plane
+    assert [p for p in api.pods if "target" in p] == []
+    # every image the attempt pushed was deleted and its chunks collected
+    assert cluster.registry.list_images() == []
+    assert cluster.registry.gc() == (0, 0)  # nothing left to collect
+    # the workload kept folding correctly after the rollback
+    from repro.core.workload import reference_fold
+    ref = reference_fold(HashConsumer, tokens, worker.last_msg_id)
+    assert ref.state_equal(worker)
+
+
+def test_statefulset_rollback_recreates_source_with_identity(tmp_path):
+    """The stop-then-replay path deletes the source before the failure:
+    rollback must re-create it from its live worker and re-claim the
+    StatefulSet identity."""
+    faults = [Fault("node_crash", at=48.0, node="node1")]
+    cluster = Cluster(str(tmp_path / "reg"), num_nodes=2, faults=faults)
+    sim, api, broker = cluster.sim, cluster.api, cluster.broker
+    q = broker.declare_queue("orders")
+    holder = {}
+
+    def boot():
+        pod = yield from api.create_pod("c0", "node0", HashConsumer(), q,
+                                        statefulset_identity="replica-0")
+        pod.start()
+        holder["pod"] = pod
+
+    sim.process(boot())
+
+    def producer():
+        while sim.now < 120.0:
+            yield 0.25
+            broker.publish("orders", {"token": 7})
+
+    sim.process(producer())
+    sim.run(until=10.0)
+    mgr = MigrationManager(api, HashConsumer, "orders")
+    mgr.migrate("ms2m_statefulset", holder["pod"], "node1",
+                statefulset_identity="replica-0")
+    with pytest.raises(MigrationError) as ei:
+        sim.run(until=300.0)
+    ctx = ei.value.context
+    assert ctx.rolled_back
+    restored = ctx.restored_source
+    assert restored is not None and restored.name == "c0"
+    assert api.statefulsets.identities["replica-0"] == "c0"
+    sim.run(until=140.0)
+    assert restored.serving and restored.worker.n_processed > 0
+
+
+def test_rollback_reports_false_when_source_node_is_dead(tmp_path):
+    """A dead source node leaves nothing to roll back to: the failure is
+    surfaced, rolled_back stays False (journal recovery's job)."""
+    faults = [Fault("node_crash", at=20.0, node="node0")]  # the SOURCE
+    cluster, holder, tokens, worker = _consumer_cluster(
+        str(tmp_path / "reg"), faults=faults, num_nodes=2)
+    sim, api = cluster.sim, cluster.api
+    sim.run(until=10.0)
+    mgr = MigrationManager(api, HashConsumer, "orders")
+    mgr.migrate("ms2m_individual", holder["pod"], "node1")
+    with pytest.raises(MigrationError) as ei:
+        sim.run(until=300.0)
+    assert not ei.value.context.rolled_back
+
+
+# ---------------------------------------------------------------------------
+# Orchestrator retry loop
+# ---------------------------------------------------------------------------
+
+def test_retry_replaces_excluding_failed_target(tmp_path):
+    """Crash the pinned target node: the retry must re-place the spec on
+    another node and complete, with attempts/recovered recorded."""
+    faults = [Fault("node_crash", at=14.0, node="node3")]
+    fleet = run_fleet_experiment(
+        2, "ms2m_individual", 8.0, registry_root=str(tmp_path / "reg"),
+        mode="parallel", num_nodes=4, seed=1, faults=faults,
+        allow_failures=True,
+        policy=MigrationPolicy(max_attempts=3, retry_backoff_s=1.0))
+    assert fleet.n_failed == 0 and fleet.n_migrated == 2
+    assert fleet.all_verified
+    assert fleet.n_recovered == 2           # both needed a second attempt
+    assert fleet.attempts == 4
+    assert all(t.node.name != "node3" for t in fleet.targets)
+    row = fleet.row()
+    assert row["attempts"] == 4 and row["recovered"] == 2
+
+
+def test_exhausted_retries_leave_source_serving(tmp_path):
+    """A permanent registry outage exhausts every attempt; each failure
+    entry must certify the rollback guarantee."""
+    faults = [Fault("registry_outage", at=10.5, duration=500.0)]
+    fleet = run_fleet_experiment(
+        2, "ms2m_precopy", 8.0, registry_root=str(tmp_path / "reg"),
+        mode="parallel", num_nodes=4, seed=2, faults=faults,
+        allow_failures=True,
+        policy=MigrationPolicy(max_attempts=2, retry_backoff_s=1.0))
+    assert fleet.n_migrated == 0 and fleet.n_failed == 2
+    for f in fleet.failures:
+        assert f["attempts"] == 2
+        assert f["rolled_back"] and f["source_serving"]
+        assert f["source_verified"]
+
+
+def test_default_policy_is_single_attempt(tmp_path):
+    """max_attempts defaults to 1: the legacy fail-once behaviour."""
+    faults = [Fault("registry_outage", at=10.5, duration=500.0)]
+    fleet = run_fleet_experiment(
+        1, "ms2m_individual", 8.0, registry_root=str(tmp_path / "reg"),
+        mode="parallel", num_nodes=3, seed=0, faults=faults,
+        allow_failures=True)
+    assert fleet.n_failed == 1
+    assert fleet.failures[0]["attempts"] == 1
+
+
+def test_same_seed_fleet_rows_are_bit_identical(tmp_path):
+    def run(reg):
+        sched = FaultSchedule.random(
+            11, n_faults=3, t_window=(10.0, 40.0), nodes=("node3",),
+            queues=("orders-0", "orders-1"))
+        fleet = run_fleet_experiment(
+            2, "ms2m_precopy", 8.0, registry_root=reg, mode="parallel",
+            num_nodes=4, seed=11, faults=sched, allow_failures=True,
+            policy=MigrationPolicy(max_attempts=3, retry_backoff_s=1.0))
+        return json.dumps(fleet.row(), sort_keys=True)
+
+    assert run(str(tmp_path / "a")) == run(str(tmp_path / "b"))

@@ -1,0 +1,112 @@
+"""Heartbeat failure-detector regressions: exactly-once death events,
+re-detection after revival, and exactly-once message delivery across a
+node flap (soft partition + revive)."""
+from repro.cluster import Cluster, Fault
+from repro.core import HashConsumer
+from repro.core.workload import reference_fold
+
+
+def test_on_node_dead_fires_exactly_once_per_death(tmp_path):
+    cluster = Cluster(str(tmp_path / "reg"), num_nodes=3)
+    sim, api = cluster.sim, cluster.api
+    dead = []
+    api.start_heartbeats(on_node_dead=dead.append)
+    sim.run(until=5.0)
+    api.kill_node("node1")
+    sim.run(until=60.0)  # many heartbeat intervals after the timeout
+    assert dead == ["node1"]
+
+
+def test_second_death_after_revive_is_redetected(tmp_path):
+    cluster = Cluster(str(tmp_path / "reg"), num_nodes=2)
+    sim, api = cluster.sim, cluster.api
+    dead = []
+    api.start_heartbeats(on_node_dead=dead.append)
+    sim.run(until=4.0)
+    api.kill_node("node1")
+    sim.run(until=20.0)
+    assert dead == ["node1"]
+    api.revive_node("node1")
+    sim.run(until=30.0)
+    assert dead == ["node1"]  # a healthy revived node emits nothing
+    api.kill_node("node1")
+    sim.run(until=50.0)
+    assert dead == ["node1", "node1"]  # the second death is re-detected
+
+
+def test_flap_shorter_than_timeout_is_not_reported(tmp_path):
+    """A partition that heals inside the heartbeat timeout never surfaces
+    as a death event."""
+    cluster = Cluster(str(tmp_path / "reg"), num_nodes=2)
+    sim, api = cluster.sim, cluster.api
+    dead = []
+    api.start_heartbeats(on_node_dead=dead.append)
+    sim.run(until=4.0)
+    api.partition_node("node1")
+    sim.run(until=8.0)  # timeout is 6s; revive at 8s - 4s down < detection
+    api.revive_node("node1")
+    sim.run(until=30.0)
+    assert dead == []
+
+
+def test_partitioned_detected_then_revived_then_killed_again(tmp_path):
+    """partition -> detected -> revive -> hard kill: two death events."""
+    cluster = Cluster(str(tmp_path / "reg"), num_nodes=2)
+    sim, api = cluster.sim, cluster.api
+    dead = []
+    api.start_heartbeats(on_node_dead=dead.append)
+    sim.run(until=2.0)
+    api.partition_node("node1")
+    sim.run(until=20.0)
+    assert dead == ["node1"]
+    api.revive_node("node1")
+    sim.run(until=26.0)
+    api.kill_node("node1")
+    sim.run(until=60.0)
+    assert dead == ["node1", "node1"]
+
+
+def test_flapping_node_pods_resume_without_double_delivery(tmp_path):
+    """Pods on a flapped (partitioned, then revived) node stall in place
+    and resume afterwards; every message is folded exactly once, even the
+    one that was mid-service when the node dropped (it is requeued and
+    redelivered, deduplicated by id)."""
+    # wide in-flight windows so the partition reliably lands mid-service
+    faults = [Fault("node_flap", at=5.5, node="node0", duration=4.0)]
+    cluster = Cluster(str(tmp_path / "reg"), num_nodes=2, faults=faults)
+    sim, api, broker = cluster.sim, cluster.api, cluster.broker
+    q = broker.declare_queue("orders")
+    worker = HashConsumer()
+    holder = {}
+
+    def boot():
+        pod = yield from api.create_pod("c0", "node0", worker, q,
+                                        processing_ms=400.0)
+        pod.start()
+        holder["pod"] = pod
+
+    sim.process(boot())
+    tokens = []
+
+    def producer():
+        i = 0
+        while sim.now < 20.0:
+            yield 0.5
+            broker.publish("orders", {"token": (i * 13) % 997})
+            tokens.append((i * 13) % 997)
+            i += 1
+
+    sim.process(producer())
+    sim.run(until=5.7)
+    pod = holder["pod"]
+    assert not pod.deleted  # a flap does NOT kill the pod (kill_node does)
+    n_at_partition = worker.n_processed
+    sim.run(until=9.0)
+    # nothing was folded while the node was "offline"
+    assert worker.n_processed == n_at_partition
+    sim.run(until=60.0)
+    assert q.depth() == 0  # resumed and drained the backlog
+    # exactly-once: the fold equals the reference fold of the full log
+    ref = reference_fold(HashConsumer, tokens, worker.last_msg_id)
+    assert ref.state_equal(worker)
+    assert worker.n_processed == len(tokens)

@@ -65,9 +65,14 @@ def test_misconfigured_cutoff_leaves_no_mirror(tmp_path):
 
     mgr = MigrationManager(cluster.api, HashConsumer, "orders")  # no cutoff
     mgr.migrate("ms2m_cutoff", holder["pod"], "node1")
-    with pytest.raises(AssertionError, match="CutoffController"):
+    # the failure is rolled back and re-raised as MigrationError (its
+    # message carries the original assertion text)
+    from repro.core import MigrationError
+    with pytest.raises(MigrationError, match="CutoffController"):
         cluster.sim.run(until=10.0)
     assert broker._mirrors["orders"] == []
+    # rollback left the source serving
+    assert holder["pod"].serving and not holder["pod"].deleted
 
 
 def test_custom_strategy_runs_through_harness_unchanged(tmp_path):
