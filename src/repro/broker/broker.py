@@ -134,6 +134,10 @@ class Broker:
         for msg in self.queues[primary]._items:  # ascending id order
             sec._push(Message(msg.msg_id, msg.payload, msg.publish_time))
         self._mirrors[primary].append(sec_name)
+        if self.sim.sanitizer is not None:
+            self.sim.sanitizer.check_listener_growth(
+                f"broker mirror list of {primary!r}",
+                len(self._mirrors[primary]))
         return sec
 
     def is_mirrored(self, primary: str, sec_name: str) -> bool:

@@ -21,6 +21,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Dict, Generator, List, Optional
 
+from repro.analysis.sanitizer import capture_site
 from repro.broker.broker import Broker, MessageQueue
 from repro.checkpoint.registry import Registry
 from repro.cluster.network import NetworkTopology, flat_topology, make_topology
@@ -106,6 +107,10 @@ class Pod:
 
     def add_on_processed(self, fn: Callable):
         self.on_processed_listeners.append(fn)
+        if self.sim.sanitizer is not None:
+            self.sim.sanitizer.check_listener_growth(
+                f"pod {self.name!r} on_processed list",
+                len(self.on_processed_listeners))
 
     def remove_on_processed(self, fn: Callable):
         if fn in self.on_processed_listeners:
@@ -125,6 +130,8 @@ class Pod:
             self.sim.process(self._run(), name=f"pod:{self.name}")
 
     def pause(self):
+        if self.sim.sanitizer is not None:
+            self.sim.sanitizer.on_pause(self)
         self.paused = True
         self.serving = False
 
@@ -136,6 +143,8 @@ class Pod:
     def stop(self):
         self.deleted = True
         self.serving = False
+        if self.sim.sanitizer is not None:
+            self.sim.sanitizer.unprotect_pod(self)
         self.wake()
 
     def wake(self):
@@ -221,16 +230,29 @@ class APIServer:
         # registry availability (fault injection): while False every
         # node<->registry transfer fails fast with TransferAborted
         self.registry_up = True
-        # in-flight registry transfers: (node_name, abort Condition)
-        # entries, so node deaths and registry outages can abort exactly
-        # the affected flows without leaking callbacks on long-lived
-        # conditions
-        self._live_transfers: set = set()
+        # in-flight registry transfers: (node_name, abort Condition) ->
+        # creation site, so node deaths and registry outages can abort
+        # exactly the affected flows without leaking callbacks on
+        # long-lived conditions.  A dict (insertion-ordered), not a set:
+        # set iteration order follows object hashes, and the abort fan-out
+        # must not depend on ids
+        self._live_transfers: Dict[tuple, Any] = {}
         # migration-event listeners (fault injection phase triggers, test
         # probes): called as fn(kind, t, data) for every MigrationContext
         # emit
         self.migration_listeners: List[Callable[[str, float, dict],
                                                None]] = []
+
+    def add_migration_listener(self, fn: Callable[[str, float, dict],
+                                                  None]) -> None:
+        self.migration_listeners.append(fn)
+        if self.sim.sanitizer is not None:
+            self.sim.sanitizer.check_listener_growth(
+                "api migration_listeners", len(self.migration_listeners))
+
+    def remove_migration_listener(self, fn: Callable) -> None:
+        if fn in self.migration_listeners:
+            self.migration_listeners.remove(fn)
 
     def _log(self, kind: str, **kw):
         self.events.append((self.sim.now, kind, kw))
@@ -397,11 +419,12 @@ class APIServer:
         # nothing accumulates on long-lived conditions)
         abort = Condition(self.sim, "xfer-abort")
         entry = (node_name, abort)
-        self._live_transfers.add(entry)
+        self._live_transfers[entry] = (
+            capture_site() if self.sim.sanitizer is not None else None)
         try:
             yield from link.transfer(nbytes, abort=abort)
         finally:
-            self._live_transfers.discard(entry)
+            self._live_transfers.pop(entry, None)
 
     def build_and_push_image(self, checkpoint: dict, tag: str,
                              node_name: Optional[str] = None,
@@ -531,8 +554,10 @@ class Cluster:
                  num_nodes: int = 3,
                  chunk_bytes: Optional[int] = None,
                  topology=None,
-                 faults=None):
-        self.sim = Sim()
+                 faults=None,
+                 sanitize: Optional[bool] = None,
+                 tiebreak_seed: Optional[int] = None):
+        self.sim = Sim(sanitize=sanitize, tiebreak_seed=tiebreak_seed)
         self.broker = Broker(self.sim)
         self.registry = Registry(registry_root, chunk_bytes=chunk_bytes)
         self.timings = timings or TimingConstants()

@@ -268,7 +268,7 @@ class FaultInjector:
                     else:
                         self._fire(f)
 
-            self.api.migration_listeners.append(on_event)
+            self.api.add_migration_listener(on_event)
         return self
 
     # -- firing ---------------------------------------------------------------

@@ -6,12 +6,44 @@ charged to the virtual clock (so benchmarks are deterministic and fast)
 while *real* JAX compute runs inside the handlers (so migrated state is
 real, bit-exactly checkable, and measured step times can calibrate the
 clock constants).
+
+Two analysis modes (see docs/determinism.md):
+
+  * ``Sim(sanitize=True)`` / ``REPRO_SIM_SANITIZE=1`` — the runtime
+    sanitizer: conditions, link flows and waiting processes carry
+    creation-site provenance, and leak/race invariants (callback-list
+    growth, conflicting double-triggers, dangling waiters at quiescence)
+    raise :class:`repro.analysis.sanitizer.SanitizerViolation`;
+  * ``Sim(tiebreak_seed=N)`` / ``REPRO_SIM_TIEBREAK=N`` — seeded schedule
+    perturbation: the pop order of *equal-timestamp* heap events is
+    permuted by a deterministic bijective hash of (event counter, seed).
+    Virtual time is untouched; only tie order changes.  Any observable
+    divergence under perturbation is a latent scheduling race
+    (``tools/sim_perturb.py`` sweeps this).
 """
 from __future__ import annotations
 
 import heapq
 import itertools
+import os
 from typing import Any, Callable, Generator, List, Optional
+
+from repro.analysis.sanitizer import (SanitizerViolation, SimSanitizer,
+                                      capture_site)
+
+_SANITIZE_ENV = "REPRO_SIM_SANITIZE"
+_TIEBREAK_ENV = "REPRO_SIM_TIEBREAK"
+_M64 = (1 << 64) - 1
+
+
+def _mix64(counter: int, seed: int) -> int:
+    """splitmix64 finalizer over (counter, seed): a bijection of the
+    counter for any fixed seed, so equal-timestamp events get a
+    deterministic, collision-free permuted pop order."""
+    z = (counter + (seed + 1) * 0x9E3779B97F4A7C15) & _M64
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _M64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _M64
+    return z ^ (z >> 31)
 
 
 class Condition:
@@ -24,15 +56,29 @@ class Condition:
         self.value: Any = None
         self._waiters: List["_Proc"] = []
         self._callbacks: List[Callable] = []
+        if sim.sanitizer is not None:
+            sim.sanitizer.track_condition(self)
 
     def on_trigger(self, fn: Callable):
         if self.triggered:
             fn(self.value)
         else:
             self._callbacks.append(fn)
+            if self.sim.sanitizer is not None:
+                self.sim.sanitizer.on_register_callback(self)
+
+    def detach(self, fn: Callable):
+        """Remove a callback registered with ``on_trigger`` (no-op when
+        it already fired or was never registered)."""
+        try:
+            self._callbacks.remove(fn)
+        except ValueError:
+            pass
 
     def trigger(self, value: Any = None):
         if self.triggered:
+            if self.sim.sanitizer is not None:
+                self.sim.sanitizer.on_retrigger(self, value)
             return
         self.triggered = True
         self.value = value
@@ -56,16 +102,32 @@ class Interrupt(Exception):
 
 
 class Sim:
-    def __init__(self):
+    def __init__(self, sanitize: Optional[bool] = None,
+                 tiebreak_seed: Optional[int] = None):
         self.now = 0.0
         self._heap: list = []
         self._counter = itertools.count()
+        # env fallbacks let harnesses flip the modes on Sims they never
+        # construct directly (Cluster builds its own)
+        if sanitize is None:
+            sanitize = os.environ.get(_SANITIZE_ENV, "") not in ("", "0")
+        self.sanitizer: Optional[SimSanitizer] = (
+            SimSanitizer() if sanitize else None)
+        if tiebreak_seed is None:
+            env = os.environ.get(_TIEBREAK_ENV, "")
+            tiebreak_seed = int(env) if env else None
+        self.tiebreak_seed = tiebreak_seed
 
     # -- scheduling ----------------------------------------------------------
     def _push(self, t: float, fn: Callable, arg: Any = None):
-        heapq.heappush(self._heap, (t, next(self._counter), fn, arg))
+        c = next(self._counter)
+        if self.tiebreak_seed is not None:
+            c = _mix64(c, self.tiebreak_seed)
+        heapq.heappush(self._heap, (t, c, fn, arg))
 
     def _ready(self, proc: _Proc, value: Any = None):
+        if self.sanitizer is not None:
+            self.sanitizer.on_ready(proc)
         self._push(self.now, lambda v: self._step(proc, v), value)
 
     def condition(self, name: str = "") -> Condition:
@@ -84,10 +146,7 @@ class Sim:
         def fire(value: Any = None):
             for c in armed:
                 if not c.triggered:
-                    try:
-                        c._callbacks.remove(fire)
-                    except ValueError:
-                        pass
+                    c.detach(fire)
             armed.clear()
             out.trigger(value)
 
@@ -96,7 +155,7 @@ class Sim:
                 fire(c.value)
                 break
             armed.append(c)
-            c._callbacks.append(fire)
+            c.on_trigger(fire)
         return out
 
     def process(self, gen: Generator, name: str = "") -> Condition:
@@ -125,6 +184,8 @@ class Sim:
                 self._ready(proc, yielded.value)
             else:
                 yielded._waiters.append(proc)
+                if self.sanitizer is not None:
+                    self.sanitizer.on_wait(proc, yielded)
         elif isinstance(yielded, (int, float)):
             self._push(self.now + float(yielded), lambda v: self._step(proc, v), None)
         else:
@@ -152,18 +213,36 @@ class Sim:
         if until is not None:
             self.now = max(self.now, until)
 
+    # -- quiescence audit ------------------------------------------------------
+    def assert_quiescent(self, **allow) -> None:
+        """With ``sanitize`` on, raise :class:`SanitizerViolation` if any
+        process is parked on a condition that can never trigger or any
+        link flow is still in flight now that the heap has drained.
+        ``allow`` forwards to :meth:`SimSanitizer.dangling`
+        (``allow_suffixes`` / ``allow_names`` tune the idle-pattern
+        allowlist).  No-op when the sanitizer is off."""
+        if self.sanitizer is None:
+            return
+        leaks = self.sanitizer.dangling(**allow)
+        if leaks:
+            raise SanitizerViolation(
+                "dangling",
+                "leaks at quiescence:\n  " + "\n  ".join(leaks))
+
 
 class TransferAborted(RuntimeError):
     """An in-flight Link transfer was withdrawn (e.g. an endpoint died)."""
 
 
 class _Flow:
-    __slots__ = ("nbytes", "remaining", "done")
+    __slots__ = ("nbytes", "remaining", "done", "created")
 
     def __init__(self, sim: Sim, nbytes: float):
         self.nbytes = nbytes
         self.remaining = nbytes
         self.done = Condition(sim, "flow")
+        self.created = (capture_site() if sim.sanitizer is not None
+                        else None)
 
 
 class Link:
@@ -200,6 +279,8 @@ class Link:
         self._flows: List[_Flow] = []
         self._last = sim.now
         self._gen = 0
+        if sim.sanitizer is not None:
+            sim.sanitizer.track_link(self)
 
     @property
     def n_flows(self) -> int:

@@ -171,12 +171,34 @@ class PartitionedService:
             for b in buckets:
                 self.ownership[b] = new_idx
             yield t.route_switch_s
-            # 2) drain the donor's in-flight messages for moved buckets
+            # 2) drain the donor's backlog + in-flight message for moved
+            #    buckets — event-driven, not a busy-poll [SIM004]: wait on
+            #    the donor's on_processed events and re-check after each,
+            #    so the drain contributes zero sim events beyond the
+            #    donor's own service completions
             donor_q = self.queues[donor]
-            while any(bucket_of(int(m.payload["key"]), self.num_buckets)
-                      in moved for m in donor_q._items):
-                yield 0.05
-            yield 0.1  # let a message mid-service complete
+            donor_pod = self.pods[donor]
+
+            def _moved_pending() -> bool:
+                if any(bucket_of(int(m.payload["key"]), self.num_buckets)
+                       in moved for m in donor_q._items):
+                    return True
+                inflight = donor_pod.in_flight
+                return (inflight is not None
+                        and bucket_of(int(inflight.payload["key"]),
+                                      self.num_buckets) in moved)
+
+            while _moved_pending():
+                drained = api.sim.condition(f"{self.name}:drain")
+
+                def _on_proc(_pod, _msg, cond=drained):
+                    cond.trigger()
+
+                donor_pod.add_on_processed(_on_proc)
+                try:
+                    yield drained
+                finally:
+                    donor_pod.remove_on_processed(_on_proc)
             # 3) transfer the (separable) bucket folds
             states = self.workers[donor].export_buckets(buckets)
             self.workers[donor].drop_buckets(buckets)

@@ -23,7 +23,7 @@ from __future__ import annotations
 from typing import Any, Callable, Generator, List, Optional
 
 from repro.cluster.cluster import APIServer, Pod
-from repro.cluster.sim import Condition
+from repro.cluster.sim import Condition, Interrupt
 from repro.core.cutoff import CutoffController
 from repro.core.policy import MigrationEvent, MigrationPolicy, MigrationReport  # noqa: F401  (re-export)
 from repro.core.strategy import (
@@ -125,9 +125,16 @@ class MigrationManager:
         try:
             result = yield from cls().run(ctx)
             return result
+        except Interrupt:
+            # kernel control flow (Interrupt subclasses Exception, so the
+            # broad handler below would swallow it): the interrupter owns
+            # recovery, not the rollback path [SIM001]
+            raise
         except Exception as exc:  # noqa: BLE001 — every failure rolls back
             try:
                 yield from ctx.rollback(exc)
+            except Interrupt:
+                raise  # never eat a kernel interrupt mid-rollback [SIM001]
             except Exception as rexc:  # noqa: BLE001
                 # rollback itself failed (e.g. the source node died too);
                 # surface the original failure, keep the rollback error

@@ -41,7 +41,7 @@ from typing import Any, Callable, Dict, Generator, List, Optional, Union
 import numpy as np
 
 from repro.cluster.cluster import APIServer, Cluster, Node, Pod, TimingConstants
-from repro.cluster.sim import Condition
+from repro.cluster.sim import Condition, Interrupt
 from repro.core.cutoff import CutoffController
 from repro.core.migration import MigrationManager, MigrationReport
 from repro.core.policy import MigrationPolicy
@@ -378,6 +378,11 @@ class ClusterMigrationOrchestrator:
                     self._inflight[target_node] -= 1
                 report.attempts = attempt
                 return "ok", report, target
+            except Interrupt:
+                # kernel control flow is not a migration failure: the
+                # interrupter owns recovery — re-raise before the broad
+                # isolation handler can eat it [SIM001]
+                raise
             except Exception as exc:  # noqa: BLE001 — isolate any failure
                 retryable = isinstance(exc, MigrationError)
                 if retryable:
@@ -417,8 +422,14 @@ class ClusterMigrationOrchestrator:
                 active[cond] = spec
                 fleet.peak_concurrency = max(fleet.peak_concurrency,
                                              len(active))
-            yield self.sim.any_of(*active.keys())
-            for cond in [c for c in active if c.triggered]:
+            # snapshot the fan-out in explicit launch order [SIM003]: the
+            # wakeup must not be built from a view of a dict that the
+            # drain below mutates, and the arm order (-> any_of callback
+            # order) must be the deterministic admission order, not
+            # whatever a set/hash iteration yields
+            armed = list(active.keys())
+            yield self.sim.any_of(*armed)
+            for cond in [c for c in armed if c.triggered]:
                 active.pop(cond)
                 status, *payload = cond.value
                 if status == "ok":

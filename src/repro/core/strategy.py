@@ -209,6 +209,11 @@ class MigrationContext:
         self.rolled_back = False   # rollback restored the workload
         self.restored_source: Optional[Pod] = None
         self.rollback_error: Optional[BaseException] = None
+        if self.sim.sanitizer is not None:
+            # this migration now owns the source: if a previous attempt's
+            # rollback armed a stale-pause watchpoint on it, disarm it —
+            # pausing the source is legitimate again
+            self.sim.sanitizer.unprotect_pod(source)
 
     # -- trace ----------------------------------------------------------------
     def emit(self, kind: str, **data: Any):
@@ -360,6 +365,10 @@ class MigrationContext:
             pod.start()
             self.restored_source = pod
             self.rolled_back = True
+        if self.rolled_back and self.sim.sanitizer is not None:
+            # arm the stale-pause watchpoint: nothing owns this pod now, so
+            # any later pause() is a timer that outlived its migration
+            self.sim.sanitizer.protect_pod(self.restored_source)
         self.emit("rollback_end", rolled_back=self.rolled_back,
                   restored_source=(self.restored_source.name
                                    if self.restored_source else None))
@@ -643,10 +652,15 @@ class ThresholdCutoffCatchup(CatchupDiscipline):
         source, state = ctx.source, self.state
 
         def _fire():
-            if (not ctx.closed and not state["fired"] and not source.paused
+            if ctx.closed:
+                # the migration is over; the deadline correctly disarms
+                # itself (the sanitizer counts these — a *missing* guard
+                # here is exactly what its stale-pause watchpoint catches)
+                if ctx.sim.sanitizer is not None:
+                    ctx.sim.sanitizer.note_disarmed_timer()
+                return
+            if (not state["fired"] and not source.paused
                     and not source.deleted):
-                # ctx.closed guard: after a rollback the source is serving
-                # again and a stale deadline must not pause it
                 state["fired"] = True
                 state["pause_time"] = ctx.sim.now
                 source.pause()

@@ -1,0 +1,85 @@
+"""Virtual-time schedule perturbation: kernel-level permutation
+semantics, and the bit-identity gate on flat-topology migration
+timelines (the full 5-seed CI sweep is the slow-marked test)."""
+import pytest
+
+from repro.analysis.perturb import (canon, perturb_regressions,
+                                    regression_row, tiebreak)
+from repro.cluster.sim import Sim, _mix64
+
+
+def _tie_order(tiebreak_seed, n=6):
+    """Fire n processes at the same instant; return completion order."""
+    sim = Sim(tiebreak_seed=tiebreak_seed)
+    log = []
+
+    def proc(tag):
+        yield 1.0
+        log.append(tag)
+
+    for i in range(n):
+        sim.process(proc(i), name=f"p{i}")
+    sim.run()
+    return log
+
+
+def test_mix64_is_bijective_per_seed():
+    for seed in (0, 1, 7):
+        outs = {_mix64(i, seed) for i in range(20_000)}
+        assert len(outs) == 20_000
+
+
+def test_tiebreak_permutes_equal_time_events_only():
+    base = _tie_order(None)
+    assert base == list(range(6))  # unperturbed: submission order
+    orders = {tuple(_tie_order(s)) for s in range(8)}
+    assert len(orders) > 1  # the seeds actually permute tie order
+    for order in orders:
+        assert sorted(order) == list(range(6))  # same events, same time
+
+
+def test_tiebreak_is_deterministic_per_seed():
+    assert _tie_order(3) == _tie_order(3)
+
+
+def test_distinct_timestamps_never_reorder():
+    sim = Sim(tiebreak_seed=5)
+    log = []
+
+    def proc(tag, delay):
+        yield delay
+        log.append(tag)
+
+    for i, delay in enumerate([0.3, 0.1, 0.2]):
+        sim.process(proc(i, delay))
+    sim.run()
+    assert log == [1, 2, 0]  # strictly by virtual time
+
+
+def test_tiebreak_env_var_plumbs_into_nested_sims(monkeypatch):
+    with tiebreak(42):
+        assert Sim().tiebreak_seed == 42
+    assert Sim().tiebreak_seed is None
+
+
+def test_flat_regression_row_bit_identical_under_one_seed():
+    """Fast slice of the CI gate: one strategy, one tie-break seed."""
+    base = canon(regression_row("ms2m_individual"))
+    perturbed = canon(regression_row("ms2m_individual", tiebreak_seed=3))
+    assert perturbed == base
+
+
+@pytest.mark.slow
+def test_flat_regression_timelines_bit_identical_across_5_seeds():
+    """The full acceptance gate: every strategy's flat-topology timeline
+    is bit-identical across all 5 tie-break perturbation seeds."""
+    report = perturb_regressions((1, 2, 3, 4, 5))
+    assert report["ok"], report
+
+
+@pytest.mark.slow
+def test_chaos_invariant_holds_under_perturbation():
+    from repro.analysis.perturb import perturb_chaos
+
+    report = perturb_chaos((1, 2, 3), chaos_seeds=(10_000,))
+    assert report["ok"], report

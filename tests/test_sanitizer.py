@@ -1,0 +1,269 @@
+"""Runtime-sanitizer coverage: both reconstructed historical leaks (the
+PR 1 ``on_processed`` listener leak and the PR 4 ``any_of`` loser-callback
+leak), conflicting double-triggers, the stale-pause watchpoint, and the
+quiescence audit — each reported with creation-site provenance."""
+import pytest
+
+from repro.analysis.sanitizer import SanitizerViolation
+from repro.cluster.cluster import Cluster
+from repro.cluster.sim import Sim
+from repro.core import HashConsumer
+
+
+# -- historical leak 1: any_of loser callbacks --------------------------------
+def test_anyof_loser_callback_leak_detected_with_creation_site():
+    """Reconstruction of the pre-PR 4 ``any_of``: losers were never
+    detached, so a driver loop racing fresh conditions against one
+    long-lived condition grew its callback list by one per wakeup.  The
+    sanitizer must trip on the growth and point at the long-lived
+    condition's creation site."""
+    sim = Sim(sanitize=True)
+    wake = sim.condition("driver:wake")  # long-lived, never triggers
+
+    def leaky_any_of(*conds):
+        out = sim.condition("any")
+
+        def fire(value=None):
+            out.trigger(value)  # historical bug: losers stay attached
+
+        for c in conds:
+            c.on_trigger(fire)
+        return out
+
+    with pytest.raises(SanitizerViolation) as ei:
+        for i in range(200):  # default threshold is 64
+            done = sim.condition(f"done{i}")
+            leaky_any_of(done, wake)
+            done.trigger()
+    assert ei.value.kind == "callback_leak"
+    assert "driver:wake" in str(ei.value)
+    assert any("test_sanitizer.py" in frame for frame in ei.value.created)
+
+
+def test_fixed_anyof_does_not_trip_the_sanitizer():
+    """The shipped ``any_of`` detaches losers: the same driver pattern
+    must run clean under the sanitizer."""
+    sim = Sim(sanitize=True)
+    wake = sim.condition("driver:wake")
+    for i in range(200):
+        done = sim.condition(f"done{i}")
+        sim.any_of(done, wake)
+        done.trigger()
+    assert len(wake._callbacks) == 0
+
+
+# -- historical leak 2: on_processed listeners --------------------------------
+def test_on_processed_listener_leak_detected(tmp_path):
+    """Reconstruction of the pre-PR 1 sync-condition leak: every
+    migration chained a listener onto the source pod and never removed
+    it.  The sanitizer must trip on the listener-list growth."""
+    cluster = Cluster(str(tmp_path), num_nodes=2, sanitize=True)
+    sim, api, broker = cluster.sim, cluster.api, cluster.broker
+    q = broker.declare_queue("orders")
+    holder = {}
+
+    def boot():
+        pod = yield from api.create_pod("c0", "node0", HashConsumer(), q)
+        holder["pod"] = pod
+
+    sim.process(boot())
+    sim.run()
+    pod = holder["pod"]
+
+    with pytest.raises(SanitizerViolation) as ei:
+        for i in range(200):  # one leaked listener per "migration"
+            pod.add_on_processed(lambda p, m: None)
+    assert ei.value.kind == "listener_leak"
+    assert "'c0'" in str(ei.value)
+    assert any("test_sanitizer.py" in frame for frame in ei.value.site)
+
+
+def test_migrations_run_clean_under_sanitizer(tmp_path):
+    """The shipped migration path deregisters everything: repeated
+    migrations of one lineage must not trip any sanitizer check."""
+    from repro.core import MigrationManager
+
+    cluster = Cluster(str(tmp_path), num_nodes=3, sanitize=True)
+    sim, api, broker = cluster.sim, cluster.api, cluster.broker
+    broker.declare_queue("orders")
+    stop = {"flag": False}
+
+    def producer():
+        while not stop["flag"]:
+            yield 0.1
+            broker.publish("orders", {"token": 7})
+
+    sim.process(producer())
+    holder = {}
+
+    def boot():
+        pod = yield from api.create_pod("consumer-0", "node0",
+                                        HashConsumer(),
+                                        broker.queues["orders"])
+        pod.start()
+        holder["pod"] = pod
+
+    sim.process(boot())
+    sim.run(until=5.0)
+
+    mgr = MigrationManager(api, HashConsumer, "orders")
+    pod = holder["pod"]
+    for hop, node in enumerate(["node1", "node2"]):
+        done = mgr.migrate("ms2m_individual", pod, node)
+        sim.run(stop_when=done)
+        _, pod = done.value
+    stop["flag"] = True
+    sim.run(until=sim.now + 2.0)
+    assert pod.worker.n_processed > 0
+    assert sim.sanitizer.stats["conditions"] > 0
+
+
+# -- conflicting double-trigger -----------------------------------------------
+def test_double_trigger_with_conflicting_value_raises():
+    sim = Sim(sanitize=True)
+    c = sim.condition("result")
+    c.trigger("a")
+    c.trigger()     # idempotent re-trigger: the kernel contract, legal
+    c.trigger("a")  # same value: legal
+    with pytest.raises(SanitizerViolation) as ei:
+        c.trigger("b")
+    assert ei.value.kind == "double_trigger"
+    assert any("test_sanitizer.py" in frame for frame in ei.value.created)
+
+
+# -- stale-pause watchpoint ---------------------------------------------------
+def test_stale_pause_after_rollback_restore_detected(tmp_path):
+    """A pod restored to service by a rollback is owned by nobody; a
+    later ``pause()`` is the stale-cutoff-deadline bug class (PR 5) and
+    must raise with the restore site."""
+    cluster = Cluster(str(tmp_path), num_nodes=2, sanitize=True)
+    sim, api, broker = cluster.sim, cluster.api, cluster.broker
+    q = broker.declare_queue("orders")
+    holder = {}
+
+    def boot():
+        pod = yield from api.create_pod("c0", "node0", HashConsumer(), q)
+        pod.start()
+        holder["pod"] = pod
+
+    sim.process(boot())
+    sim.run()
+    pod = holder["pod"]
+
+    sim.sanitizer.protect_pod(pod)  # what rollback() arms after a restore
+    with pytest.raises(SanitizerViolation) as ei:
+        pod.pause()
+    assert ei.value.kind == "stale_pause"
+    assert not pod.paused  # the violation fired before the pause landed
+
+    sim.sanitizer.unprotect_pod(pod)  # what a new MigrationContext does
+    pod.pause()
+    assert pod.paused
+
+
+def test_cutoff_timer_disarms_cleanly_after_rollback(tmp_path):
+    """Integration: a migration that fails and rolls back leaves its
+    cutoff deadline armed in the heap; when it fires after ``closed`` it
+    must disarm (counted) rather than pause the restored source."""
+    from repro.core import MigrationManager, MigrationPolicy
+    from repro.core.migration import MigrationError
+
+    cluster = Cluster(str(tmp_path), num_nodes=3, sanitize=True)
+    sim, api, broker = cluster.sim, cluster.api, cluster.broker
+    broker.declare_queue("orders")
+    stop = {"flag": False}
+
+    def producer():
+        while not stop["flag"]:
+            yield 0.05
+            broker.publish("orders", {"token": 3})
+
+    sim.process(producer())
+    holder = {}
+
+    def boot():
+        pod = yield from api.create_pod("consumer-0", "node0",
+                                        HashConsumer(),
+                                        broker.queues["orders"])
+        pod.start()
+        holder["pod"] = pod
+
+    sim.process(boot())
+    sim.run(until=5.0)
+
+    def saboteur():
+        yield 8.0  # mid-transfer, before the cutoff deadline
+        api.kill_node("node1")
+
+    sim.process(saboteur())
+    mgr = MigrationManager(api, HashConsumer, "orders",
+                           policy=MigrationPolicy(t_replay_max=2.0))
+    done = mgr.migrate("ms2m_individual", holder["pod"], "node1")
+    with pytest.raises(MigrationError):
+        sim.run(stop_when=done)
+    # drain the rest of the heap: the stale deadline fires in here — with
+    # the ctx.closed guard it must disarm, not pause the restored source
+    stop["flag"] = True
+    sim.run(until=sim.now + 60.0)
+    assert not holder["pod"].paused
+    assert holder["pod"].serving
+
+
+# -- quiescence audit ---------------------------------------------------------
+def test_dangling_waiter_reported_at_quiescence():
+    sim = Sim(sanitize=True)
+    never = sim.condition("reply")  # nothing will ever trigger this
+
+    def stuck():
+        yield never
+
+    sim.process(stuck(), name="stuck-proc")
+    sim.run()
+    with pytest.raises(SanitizerViolation) as ei:
+        sim.assert_quiescent()
+    assert ei.value.kind == "dangling"
+    assert "stuck-proc" in str(ei.value)
+    assert "reply" in str(ei.value)
+
+
+def test_idle_service_loops_are_allowlisted():
+    """Pods parked on queue/wake/stall conditions are the idle steady
+    state, not leaks: the default allowlist must pass them."""
+    sim = Sim(sanitize=True)
+    for suffix in (":not_empty", ":wake", ":stall", ":down"):
+        cond = sim.condition(f"pod-0{suffix}")
+
+        def parked(c=cond):
+            yield c
+
+        sim.process(parked(), name=f"idle{suffix}")
+    sim.run()
+    sim.assert_quiescent()  # no raise
+
+
+def test_inflight_link_flow_reported():
+    sim = Sim(sanitize=True)
+    link = sim.link(1e6, name="reg-link")
+
+    def mover():
+        yield from link.transfer(5e6)  # 5 s of wire time
+
+    sim.process(mover(), name="mover")
+    sim.run(until=1.0)  # stop mid-flight
+    leaks = sim.sanitizer.dangling()
+    assert any("reg-link" in entry for entry in leaks)
+    sim.run()  # let it finish: the flow departs
+    sim.assert_quiescent()
+
+
+def test_sanitizer_off_has_no_provenance_and_no_checks():
+    # explicit False: overrides a REPRO_SIM_SANITIZE=1 env (the CI
+    # sanitized job runs this file with the env set)
+    sim = Sim(sanitize=False)
+    c = sim.condition("x")
+    assert sim.sanitizer is None
+    assert not hasattr(c, "created")
+    c.trigger("a")
+    c.trigger("b")  # no sanitizer, no raise (contract: first value wins)
+    assert c.value == "a"
+    sim.assert_quiescent()  # no-op

@@ -1,0 +1,205 @@
+"""Fixture coverage for every simlint rule (SIM001-SIM005), the
+suppression pragma, and the clean-tree gate on src/repro itself."""
+import os
+import textwrap
+
+from repro.analysis.lint import RULES, Finding, lint_paths, lint_source
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def rules_of(src):
+    return [f.rule for f in lint_source(textwrap.dedent(src))]
+
+
+# -- SIM001: broad except swallowing Interrupt in a generator ----------------
+def test_sim001_flags_broad_except_in_generator():
+    assert rules_of("""
+        def proc(ctx):
+            try:
+                yield 1.0
+            except Exception:
+                pass
+    """) == ["SIM001"]
+
+
+def test_sim001_bare_except_also_flagged():
+    assert rules_of("""
+        def proc(ctx):
+            try:
+                yield 1.0
+            except:
+                pass
+    """) == ["SIM001"]
+
+
+def test_sim001_passes_with_prior_interrupt_handler():
+    assert rules_of("""
+        def proc(ctx):
+            try:
+                yield 1.0
+            except Interrupt:
+                raise
+            except Exception:
+                pass
+    """) == []
+
+
+def test_sim001_passes_when_handler_just_reraises():
+    assert rules_of("""
+        def proc(ctx):
+            try:
+                yield 1.0
+            except Exception:
+                raise
+    """) == []
+
+
+def test_sim001_ignores_non_generators():
+    assert rules_of("""
+        def helper():
+            try:
+                return 1
+            except Exception:
+                return None
+    """) == []
+
+
+# -- SIM002: wall clock / unseeded randomness --------------------------------
+def test_sim002_flags_wall_clock_and_global_rng():
+    src = """
+        import random
+        import time
+
+        def sample():
+            t = time.time()
+            r = random.random()
+            n = np.random.randint(10)
+            return t, r, n
+    """
+    assert rules_of(src) == ["SIM002", "SIM002", "SIM002"]
+
+
+def test_sim002_seeded_randomness_is_legal():
+    assert rules_of("""
+        def sample(seed, key):
+            rng = np.random.default_rng(seed)
+            ks = jax.random.split(key, 3)
+            t0 = time.perf_counter()  # measures real compute, not schedule
+            return rng.integers(0, 10), ks, t0
+    """) == []
+
+
+def test_sim002_suppression_pragma():
+    assert rules_of("""
+        def compile_timer():
+            t0 = time.time()  # simlint: disable=SIM002
+            # the pragma also works on the line above:
+            # simlint: disable=SIM002
+            t1 = time.time()
+            return t1 - t0
+    """) == []
+
+
+def test_suppression_does_not_leak_to_other_rules():
+    assert rules_of("""
+        def sample():
+            return time.time()  # simlint: disable=SIM001
+    """) == ["SIM002"]
+
+
+# -- SIM003: ordering-sensitive iteration ------------------------------------
+def test_sim003_flags_set_iteration():
+    assert rules_of("""
+        def schedule(jobs):
+            for j in set(jobs):
+                launch(j)
+    """) == ["SIM003"]
+
+
+def test_sim003_flags_anyof_over_live_dict_view():
+    assert rules_of("""
+        def drive(sim, active):
+            yield sim.any_of(*active.keys())
+    """) == ["SIM003"]
+
+
+def test_sim003_flags_mutation_during_iteration():
+    assert rules_of("""
+        def drain(active):
+            for cond in active:
+                active.pop(cond)
+    """) == ["SIM003"]
+
+
+def test_sim003_sorted_and_snapshotted_are_legal():
+    assert rules_of("""
+        def drive(sim, active):
+            armed = list(active.keys())
+            yield sim.any_of(*armed)
+            for cond in sorted(active):
+                done(cond)
+    """) == []
+
+
+# -- SIM004: busy-poll loops --------------------------------------------------
+def test_sim004_flags_busy_poll():
+    assert rules_of("""
+        def drain(queue):
+            while queue.depth() > 0:
+                yield 0.05
+    """) == ["SIM004"]
+
+
+def test_sim004_large_delays_and_conditions_are_legal():
+    assert rules_of("""
+        def heartbeat(sim, interval, wake):
+            while True:
+                yield 5.0
+            while True:
+                yield interval
+            while True:
+                yield wake
+    """) == []
+
+
+# -- SIM005: on_trigger in a loop without detach ------------------------------
+def test_sim005_flags_undetached_loop_registration():
+    assert rules_of("""
+        def driver(conds, wake):
+            while True:
+                for c in conds:
+                    c.on_trigger(print)
+                yield wake
+    """) == ["SIM005"]
+
+
+def test_sim005_paired_detach_is_legal():
+    assert rules_of("""
+        def driver(conds, wake):
+            while True:
+                for c in conds:
+                    c.on_trigger(print)
+                yield wake
+                for c in conds:
+                    c.detach(print)
+    """) == []
+
+
+# -- harness ------------------------------------------------------------------
+def test_finding_format_is_clickable():
+    f = Finding("src/x.py", 12, 4, "SIM002", "msg")
+    assert f.format() == "src/x.py:12:4: SIM002 msg"
+    assert f.as_dict()["rule"] == "SIM002"
+
+
+def test_all_five_rules_have_fixture_coverage():
+    assert sorted(RULES) == ["SIM001", "SIM002", "SIM003", "SIM004",
+                             "SIM005"]
+
+
+def test_src_repro_tree_is_clean():
+    """The CI gate: the live tree must lint clean (suppressions count as
+    clean — they are the documented escape hatch)."""
+    findings = lint_paths([os.path.join(REPO, "src", "repro")])
+    assert findings == [], "\n".join(f.format() for f in findings)

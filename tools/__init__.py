@@ -1,0 +1,1 @@
+# Makes the repo-level tools runnable as modules (python -m tools.simlint).

@@ -1,0 +1,22 @@
+#!/usr/bin/env python
+"""Schedule-perturbation runner (the CI ``sim-perturb`` job).
+
+  python -m tools.sim_perturb               # 5 seeds, both sweeps
+  python -m tools.sim_perturb --seeds 3 --skip-chaos --json
+
+Thin wrapper around :mod:`repro.analysis.perturb`; see
+docs/determinism.md for what a divergence means and how to debug one.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, REPO)  # benchmarks.chaos for the chaos sweep
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.analysis.perturb import main  # noqa: E402
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,22 @@
+#!/usr/bin/env python
+"""Determinism lint runner (the CI ``simlint`` gate).
+
+  python -m tools.simlint src/repro          # exit 1 on any finding
+  python -m tools.simlint --json src/repro   # machine-readable report
+
+Thin wrapper around :mod:`repro.analysis.lint` so the gate runs from a
+repo checkout without installing the package; see docs/determinism.md
+for the SIMxxx rule catalog and suppression syntax.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.analysis.lint import main  # noqa: E402
+
+if __name__ == "__main__":
+    raise SystemExit(main())
