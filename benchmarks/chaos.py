@@ -77,6 +77,8 @@ def run_chaos(quick: bool = False,
               out_path: Optional[str] = None) -> List[Dict]:
     import numpy as np
 
+    from benchmarks.stats import summarize_spans
+
     seeds_per_cell = 17 if quick else 25
     rows: List[Dict] = []
     total = invariant_fails = 0
@@ -107,6 +109,10 @@ def run_chaos(quick: bool = False,
                 "recovered": sum(r["recovered"] for r in rs),
                 "exposure_s": round(float(np.mean(
                     [r["span"] for r in rs])), 2),
+                # distribution shape across the seed sweep, not just the
+                # mean (deterministic interpolation: benchmarks.stats)
+                **{f"exposure_{k}": v for k, v in summarize_spans(
+                    [r["span"] for r in rs]).items()},
                 "max_downtime_mean": round(float(np.mean(
                     [r["max_downtime"] for r in rs])), 3),
                 "invariant_ok": all(o["invariant_ok"] for o in outcomes),

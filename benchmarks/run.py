@@ -15,6 +15,9 @@ the full result files under results/.
   chaos    chaos              — seeded fault schedules vs scheme (ours):
                                 >= 100 randomized schedules, rollback/retry
                                 invariants + same-seed determinism
+  serving  serving_handoff    — tail latency under migration (ours):
+                                dual-serving KV-cache handoff vs stop-then-
+                                replay vs cold, exactly-once audited
 
 ``--quick`` is the CI smoke profile: repeats=1, the paper rates only,
 hash-fold consumers everywhere (the JAX-compute sections are skipped), and
@@ -166,6 +169,28 @@ def main(argv=None) -> int:
              f"attempts={r['attempts']} recovered={r['recovered']} "
              f"invariant_ok={r['invariant_ok']}")
     print(f"# chaos done in {time.time()-t:.1f}s", file=sys.stderr)
+
+    t = time.time()
+    # serving: tail latency under migration (dual-serving handoff vs
+    # stop-then-replay vs cold) over flat + edge_wan, plus one injected
+    # mid-handoff fault with retry (also in --quick so CI exercises the
+    # handoff path and uploads serving_handoff.json)
+    from benchmarks.serving_handoff import run_serving_bench
+    for r in run_serving_bench(quick=args.quick,
+                               out_path="results/serving_handoff.json"):
+        if r["scheme"] == "VERDICT":
+            _csv(f"serving/verdict@{r['topology']}", r["p99_handoff"],
+                 f"p99 handoff={r['p99_handoff']}s vs "
+                 f"stop_then_replay={r['p99_stop_then_replay']}s "
+                 f"win={r['p99_win']}")
+            continue
+        tag = "+fault" if "fault" in r else ""
+        _csv(f"serving/{r['scheme']}@{r['topology']}{tag}",
+             r["latency"]["p99"],
+             f"p50={r['latency']['p50']}s p999={r['latency']['p999']}s "
+             f"exactly_once={r['exactly_once']} "
+             f"state_verified={r['state_verified']} lost={r['lost']}")
+    print(f"# serving done in {time.time()-t:.1f}s", file=sys.stderr)
 
     print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
     return 0

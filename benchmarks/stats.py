@@ -1,0 +1,14 @@
+"""Shared latency/percentile helpers for benchmark report rows.
+
+Thin re-export of :mod:`repro.analysis.stats` — the implementation lives
+in ``src`` so the operator CLI (which runs with ``PYTHONPATH=src`` only)
+can use the same deterministic percentile math as the benchmarks; the
+report rows never depend on numpy's version-specific quantile methods.
+"""
+from repro.analysis.stats import (  # noqa: F401
+    LATENCY_PERCENTILES,
+    latency_summary,
+    percentile,
+    percentiles,
+    summarize_spans,
+)

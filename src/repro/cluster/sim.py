@@ -337,10 +337,24 @@ class Link:
         self._gen += 1
         if not self._flows:
             return
+        while True:
+            rate = self.capacity_Bps / len(self._flows)
+            residual = min(f.remaining for f in self._flows)
+            t = self.sim.now + residual / rate
+            if t > self.sim.now:
+                break
+            # the residual is below the clock's float resolution at this
+            # timestamp (now + dt == now): arming a tick could never make
+            # progress (_settle sees dt == 0), so credit the sub-resolution
+            # window synchronously — every flow advances by the residual —
+            # and finish what that settles
+            for f in self._flows:
+                f.remaining -= residual
+            self._finish_completed()
+            if not self._flows:
+                return
         gen = self._gen
-        rate = self.capacity_Bps / len(self._flows)
-        dt = min(f.remaining for f in self._flows) / rate
-        self.sim.call_at(self.sim.now + dt, lambda: self._on_tick(gen))
+        self.sim.call_at(t, lambda: self._on_tick(gen))
 
     def _on_tick(self, gen: int) -> None:
         if gen != self._gen:  # superseded by an arrival/departure

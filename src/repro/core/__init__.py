@@ -35,5 +35,7 @@ from repro.core.workload import (  # noqa: F401
     ExperimentResult,
     HashConsumer,
     make_jax_worker_factory,
+    open_loop_gaps,
+    request_stream,
     run_migration_experiment,
 )

@@ -237,12 +237,17 @@ class FleetReport:
         return out
 
     def row(self) -> Dict[str, Any]:
+        from repro.analysis.stats import summarize_spans
+
+        downtime_pcts = summarize_spans([r.downtime for r in self.reports])
         return {
             "n_migrated": self.n_migrated,
             "n_failed": self.n_failed,
             "span": round(self.span, 3),
             "peak_concurrency": self.peak_concurrency,
             "max_downtime": round(self.max_downtime, 3),
+            "downtime_p50": downtime_pcts["p50"],
+            "downtime_p99": downtime_pcts["p99"],
             "total_downtime": round(self.total_downtime, 3),
             "raw_bytes_total": self.raw_bytes_total,
             "wire_bytes_total": self.wire_bytes_total,
@@ -579,9 +584,11 @@ def run_fleet_experiment(
         broker.declare_queue(qname)
 
         def producer(i=i, qname=qname):
+            from repro.core.workload import open_loop_gaps
             rng = np.random.default_rng(seed * 1009 + i)
+            gaps = open_loop_gaps(rng, message_rate)
             while not stop_producing["flag"]:
-                yield float(rng.exponential(1.0 / message_rate))
+                yield next(gaps)
                 token = int(rng.integers(0, 2048))
                 broker.publish(qname, {"token": token})
                 published[i].append(token)

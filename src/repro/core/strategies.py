@@ -31,6 +31,14 @@ beyond-paper schemes), in order:
                                   migrate time from observed lam/mu and
                                   state-size telemetry (registry-only: the
                                   manager core is untouched).
+  Strategy 6  serving_handoff   — beyond-paper (SHADOW-style): zero-downtime
+                                  serving migration — KV-cache lanes + the
+                                  admitted-request log pre-copy in per-slot
+                                  chunks, dual-serving window, per-slot
+                                  in-flight handoff with exactly-once
+                                  completion.  Defined (and registered) in
+                                  ``repro.serving.handoff``; imported below
+                                  for its registration side effect.
 
 Replay correctness: message ids are totally ordered per queue; the target
 skips ids <= the checkpoint marker and replays the rest through the same
@@ -297,3 +305,14 @@ class MS2MAdaptive(MigrationStrategy):
         delegate = get_strategy(chosen)()
         result = yield from delegate.run(ctx)
         return result
+
+
+# Strategy 6 lives with the serving subsystem; importing it here registers
+# it alongside the built-ins (the manager core stays untouched).
+try:
+    from repro.serving.handoff import ServingHandoff  # noqa: E402,F401
+except ImportError:
+    # repro.serving.handoff is itself mid-import (its import of the
+    # registry layer runs this module via the package __init__); its
+    # @register_strategy decorator runs when that import resumes.
+    pass

@@ -15,7 +15,7 @@ the legacy ``batched_replay=`` / ``replay_speedup=`` / ``precopy=`` /
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -27,6 +27,52 @@ from repro.core.cutoff import CutoffController
 from repro.core.migration import MigrationManager, MigrationReport
 from repro.core.policy import MigrationPolicy
 from repro import configs
+
+
+def open_loop_gaps(rng: np.random.Generator, rate: float, *,
+                   burst_factor: float = 1.0, burst_every: int = 0,
+                   burst_len: int = 0) -> Iterator[float]:
+    """Seeded open-loop inter-arrival generator (virtual seconds).
+
+    The default path draws ``rng.exponential(1.0 / rate)`` per arrival —
+    the exact call sequence the experiment producers always made, so
+    refactoring them onto this generator is bit-identical for every
+    existing seed.  ``burst_every``/``burst_len``/``burst_factor`` add a
+    deterministic count-based burst pattern: within every window of
+    ``burst_every`` arrivals, the first ``burst_len`` draw at
+    ``rate * burst_factor`` (a flash crowd), the rest at ``rate``.
+    Open-loop means arrivals never wait on service — queueing delay shows
+    up in the latency tail instead of being hidden by backpressure.
+    """
+    if rate <= 0.0:
+        raise ValueError(f"open_loop_gaps needs rate > 0 (got {rate})")
+    if burst_every and not 0 < burst_len <= burst_every:
+        raise ValueError("need 0 < burst_len <= burst_every for bursts")
+    n = 0
+    while True:
+        r = rate
+        if burst_every and (n % burst_every) < burst_len:
+            r = rate * burst_factor
+        yield float(rng.exponential(1.0 / r))
+        n += 1
+
+
+def request_stream(rng: np.random.Generator, *,
+                   prompt_tokens: Tuple[int, int] = (1, 4),
+                   max_new_tokens: Tuple[int, int] = (2, 12),
+                   vocab: int = 2048) -> Iterator[Dict[str, Any]]:
+    """Seeded serving-request payload stream: each item is a broker
+    payload ``{"prompt": [...], "max_new_tokens": m}`` with prompt length
+    and decode budget drawn uniformly from the given inclusive ranges.
+    The request id is assigned downstream (the broker message id), so the
+    same stream drives both the live run and the reference fold."""
+    lo_p, hi_p = prompt_tokens
+    lo_m, hi_m = max_new_tokens
+    while True:
+        n_prompt = int(rng.integers(lo_p, hi_p + 1))
+        prompt = [int(t) for t in rng.integers(0, vocab, size=n_prompt)]
+        yield {"prompt": prompt,
+               "max_new_tokens": int(rng.integers(lo_m, hi_m + 1))}
 
 
 class HashConsumer:
@@ -220,12 +266,13 @@ def run_migration_experiment(
 
     # -- producer: Poisson(λ), deterministic --------------------------------
     rng = np.random.default_rng(seed)
+    gaps = open_loop_gaps(rng, message_rate)
     published: List[int] = []
     stop_producing = {"flag": False}
 
     def producer():
         while not stop_producing["flag"]:
-            yield float(rng.exponential(1.0 / message_rate))
+            yield next(gaps)
             token = int(rng.integers(0, 2048))
             broker.publish("orders", {"token": token})
             published.append(token)

@@ -8,6 +8,12 @@ Runs the full workload (producer -> consumer pod -> migration -> verify)
 on the virtual-time cluster with a real JAX consumer and prints the
 MigrationReport (phases, downtime, image bytes, verification).
 
+``--workload serving`` switches to the serving harness instead: an
+open-loop Poisson *request* stream (``--rate`` in req/s) against a
+slot-based serving worker, per-request latency tracing and the
+exactly-once completion audit — the natural driver for the
+``serving_handoff`` strategy (but any registered strategy runs).
+
 The strategy list comes from the registry, so operator-registered schemes
 (imported via ``--strategy-module``) are drivable without touching this
 file.
@@ -76,7 +82,22 @@ def main(argv=None) -> int:
                          "(flat = the uncontended seed model)")
     ap.add_argument("--list-topologies", action="store_true",
                     help="print the topology presets and exit")
-    ap.add_argument("--rate", type=float, default=10.0)
+    ap.add_argument("--workload", default="fold",
+                    choices=("fold", "serving"),
+                    help="fold = the paper's consumer workload; serving = "
+                         "open-loop request stream against a slot-based "
+                         "serving worker with latency tracing and the "
+                         "exactly-once completion audit")
+    ap.add_argument("--rate", type=float, default=10.0,
+                    help="arrival rate (msgs/s, or req/s with "
+                         "--workload serving)")
+    ap.add_argument("--num-slots", type=int, default=8,
+                    help="decode slots of the serving worker "
+                         "(--workload serving)")
+    ap.add_argument("--decode-rounds", type=int, default=1,
+                    help="decode rounds per admission for the JAX serving "
+                         "engine: generation spans messages "
+                         "(--workload serving without --hash-consumer)")
     ap.add_argument("--processing-ms", type=float, default=50.0)
     ap.add_argument("--t-replay-max", type=float, default=45.0)
     ap.add_argument("--registry", default="")
@@ -109,6 +130,38 @@ def main(argv=None) -> int:
         return list_strategies()
     if args.list_topologies:
         return list_topologies()
+
+    if args.workload == "serving":
+        from repro.serving.handoff import run_serving_experiment
+
+        policy = MigrationPolicy(
+            precopy=args.precopy,
+            precopy_max_rounds=args.precopy_max_rounds,
+            compression=args.compression,
+            t_replay_max=args.t_replay_max,
+            max_attempts=args.max_attempts,
+            retry_backoff_s=args.retry_backoff,
+        )
+        faults = [parse_fault(spec) for spec in args.fault] or None
+        registry = args.registry or tempfile.mkdtemp(prefix="repro-registry-")
+        r = run_serving_experiment(
+            args.strategy, args.rate, registry_root=registry,
+            processing_ms=args.processing_ms, seed=args.seed,
+            worker="hash" if args.hash_consumer else "engine",
+            num_slots=args.num_slots, decode_rounds=args.decode_rounds,
+            topology=args.topology, faults=faults, policy=policy,
+            allow_failure=faults is not None)
+        print(json.dumps(r.row(), indent=2))
+        lat = r.latency()
+        if r.failed:
+            print(f"[migrate] FAILED after {r.failure.get('attempts')} "
+                  f"attempt(s): {r.failure.get('error')} (rolled back: "
+                  f"source_serving={r.failure.get('source_serving')})")
+        print(f"[migrate] p50={lat['p50']} p99={lat['p99']} "
+              f"p999={lat['p999']} downtime={r.downtime:.2f}s "
+              f"exactly_once={r.exactly_once} "
+              f"state_verified={r.state_verified}")
+        return 0 if r.exactly_once and r.state_verified is not False else 1
 
     worker_factory = None
     speedup = 1.0

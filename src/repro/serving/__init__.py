@@ -1,1 +1,11 @@
 from repro.serving.engine import ServingEngine, Request  # noqa: F401
+from repro.serving.handoff import (  # noqa: F401
+    CompletionLedger,
+    HashServingWorker,
+    ServingHandoff,
+    ServingResult,
+    ServingWorker,
+    run_serving_experiment,
+    serving_reference_fold,
+    slot_aligned_chunk_bytes,
+)

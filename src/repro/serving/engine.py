@@ -165,6 +165,27 @@ class ServingEngine:
         self.n_processed += 1
 
     def state_tree(self):
+        """Full checkpointable state: KV caches, the slot table, *and* the
+        admitted-request log (per-slot request id + generated-so-far
+        tokens), so a mid-generation checkpoint restores in-flight
+        requests instead of dropping them.  The log is derived from the
+        bookkeeping dicts at snapshot time — no hot-path cost.  A
+        non-empty admission backlog has no array form, so checkpoints are
+        only taken between admissions (the serving wrapper guarantees
+        this by draining ``waiting`` before yielding control)."""
+        if self.waiting:
+            raise RuntimeError(
+                f"{self.name}: state_tree() with {len(self.waiting)} "
+                "request(s) still waiting for admission — drain the "
+                "waiting queue before checkpointing")
+        request = np.full(self.num_slots, -1, np.int64)
+        gen_len = np.zeros(self.num_slots, np.int64)
+        gen = np.zeros((self.num_slots, self.max_seq), np.int32)
+        for s, rid in self.request_of_slot.items():
+            toks = self.generated[rid]
+            request[s] = rid
+            gen_len[s] = len(toks)
+            gen[s, : len(toks)] = toks
         return {
             "cache": self.cache,
             "slots": {
@@ -172,6 +193,9 @@ class ServingEngine:
                 "active": self.active.copy(),
                 "budget": self.budget.copy(),
                 "last_token": self.last_token.copy(),
+                "request": request,
+                "gen_len": gen_len,
+                "gen": gen,
             },
             "scalars": {
                 "last_msg_id": np.int64(self.last_msg_id),
@@ -181,15 +205,25 @@ class ServingEngine:
 
     def load_state(self, tree):
         self.cache = jax.tree.map(jnp.asarray, tree["cache"])
-        self.positions = np.asarray(tree["slots"]["positions"]).copy()
-        self.active = np.asarray(tree["slots"]["active"]).copy()
-        self.budget = np.asarray(tree["slots"]["budget"]).copy()
-        self.last_token = np.asarray(tree["slots"]["last_token"]).copy()
+        slots = tree["slots"]
+        self.positions = np.asarray(slots["positions"]).copy()
+        self.active = np.asarray(slots["active"]).copy()
+        self.budget = np.asarray(slots["budget"]).copy()
+        self.last_token = np.asarray(slots["last_token"]).copy()
         self.last_msg_id = int(tree["scalars"]["last_msg_id"])
         self.n_processed = int(tree["scalars"]["n_processed"])
         self.request_of_slot = {}
         self.generated = {}
         self.waiting = []
+        if "request" in slots:  # admitted-request log (older trees lack it)
+            request = np.asarray(slots["request"])
+            gen_len = np.asarray(slots["gen_len"])
+            gen = np.asarray(slots["gen"])
+            for s in np.flatnonzero(request >= 0):
+                rid = int(request[s])
+                self.request_of_slot[int(s)] = rid
+                self.generated[rid] = [int(t)
+                                       for t in gen[s, : int(gen_len[s])]]
 
     def state_equal(self, other, exact: bool = True) -> bool:
         if self.last_msg_id != other.last_msg_id:
@@ -203,4 +237,13 @@ class ServingEngine:
                 return False
         return bool(
             np.array_equal(self.positions, other.positions)
-            and np.array_equal(self.active, other.active))
+            and np.array_equal(self.active, other.active)
+            and self.request_of_slot == other.request_of_slot)
+
+    def slot_table(self) -> List[Dict[str, int]]:
+        """Human-readable view of the in-flight slots (handoff telemetry)."""
+        return [{"slot": s, "request_id": rid,
+                 "position": int(self.positions[s]),
+                 "generated": len(self.generated[rid]),
+                 "budget": int(self.budget[s])}
+                for s, rid in sorted(self.request_of_slot.items())]

@@ -102,3 +102,33 @@ def test_bad_fault_spec_is_a_clear_error(tmp_path):
     with pytest.raises(ValueError, match="fault spec"):
         main(["--hash-consumer", "--fault", "bogus",
               "--registry", str(tmp_path / "reg")])
+
+
+def test_list_strategies_includes_serving_handoff(capsys):
+    assert main(["--list-strategies"]) == 0
+    assert "serving_handoff" in capsys.readouterr().out
+
+
+def test_serving_workload_handoff(capsys, tmp_path):
+    rc = main(["--workload", "serving", "--hash-consumer", "--rate", "8",
+               "--strategy", "serving_handoff",
+               "--registry", str(tmp_path / "reg")])
+    out = capsys.readouterr().out
+    assert rc == 0
+    row = json.loads(out[:out.rindex("}") + 1])
+    assert row["strategy"] == "serving_handoff"
+    assert row["exactly_once"] is True
+    assert row["state_verified"] is True
+    assert row["lost"] == 0
+    assert row["latency"]["p99"] is not None
+    assert "[migrate] p50=" in out
+
+
+def test_serving_workload_baseline_scheme(capsys, tmp_path):
+    rc = main(["--workload", "serving", "--hash-consumer", "--rate", "8",
+               "--strategy", "ms2m_statefulset",
+               "--registry", str(tmp_path / "reg")])
+    out = capsys.readouterr().out
+    assert rc == 0
+    row = json.loads(out[:out.rindex("}") + 1])
+    assert row["exactly_once"] is True and row["state_verified"] is True
