@@ -28,11 +28,27 @@ acceptable for this push.
 """
 from __future__ import annotations
 
+import os
 from typing import Dict, Optional, Union
 
 import numpy as np
 
 COMPRESSION_CHOICES = ("none", "xor_rle", "int8", "auto")
+
+# Encoder backend for parent-relative codecs.  "kernel" (the default)
+# lets the registry fuse fingerprinting and encoding into one device pass
+# (repro.kernels.codec) when the leaf/chunk grid qualifies; "host" forces
+# the two-pass host codecs below — the differential suite runs both and
+# asserts byte-identical images.
+_BACKEND_ENV = "REPRO_CODEC_BACKEND"
+
+
+def codec_backend() -> str:
+    backend = os.environ.get(_BACKEND_ENV, "kernel")
+    if backend not in ("kernel", "host"):
+        raise ValueError(
+            f"{_BACKEND_ENV}={backend!r}; choices: ('kernel', 'host')")
+    return backend
 
 _RAW_FLAG = b"\x00"   # xor_rle fallback: raw literal chunk follows
 _RLE_FLAG = b"\x01"   # xor_rle: run-length stream follows
@@ -161,7 +177,12 @@ CODECS: Dict[str, DeltaCodec] = {
 
 
 def get_codec(name: str) -> DeltaCodec:
-    return CODECS[name]
+    codec = CODECS.get(name)
+    if codec is None:
+        raise ValueError(
+            f"unknown codec {name!r}; concrete codecs: {tuple(CODECS)} "
+            "(specs like 'auto' must go through resolve_compression first)")
+    return codec
 
 
 def validate_compression(spec: Union[str, Dict[str, str]]) -> None:
@@ -184,6 +205,11 @@ def resolve_compression(spec: Union[str, Dict[str, str]], tree_name: str,
     """
     if isinstance(spec, dict):
         spec = spec.get(tree_name, "none")
+    # re-check the *resolved* entry: a caller that skipped
+    # validate_compression (or a dict naming an unknown codec for this
+    # very tree) must fail here with ValueError, not silently map to a
+    # fallback codec or KeyError later at push time
+    validate_compression(spec)
     if spec == "none" or not has_parent_chunk:
         return "none"
     if spec == "int8":
@@ -197,3 +223,80 @@ def resolve_compression(spec: Union[str, Dict[str, str]], tree_name: str,
             return "int8"
         return "xor_rle"
     return "xor_rle"  # "xor_rle" and "auto"
+
+
+class FusedLeafEncoding:
+    """One fused device pass over a leaf: chunk fingerprints + the codec
+    arithmetic for *every* chunk, via the Pallas codec kernels
+    (``repro.kernels.codec`` through the ``kernels/ops.py`` dispatch).
+
+    The registry uses this in place of the fingerprint-then-host-encode
+    two-pass flow when the leaf qualifies (see ``Registry._fused_leaf``):
+    dirty detection and encoding share a single read of the state, which
+    is the device-side analogue of the paper's cheap pre-copy rounds.
+    ``fps`` is bit-identical to ``leaf_fingerprints``; ``blob(c)`` is
+    byte-identical to the matching host codec's ``encode`` for chunk
+    ``c`` — the differential suite (tests/test_codec_kernels.py) pins
+    both claims against the host oracle.
+
+    The variable-length RLE pass and blob assembly stay on host: they are
+    O(dirty bytes) and data-dependent, the wrong shape for a vector unit.
+    ``raw_seg`` serializes the leaf lazily — only incompressible chunks
+    (raw fallback) ever pay for it.
+    """
+
+    def __init__(self, leaf, parent_buf: bytes, codec_name: str,
+                 dtype: np.dtype, chunk_bytes: int):
+        from repro.kernels import ops
+
+        assert codec_name in ("xor_rle", "int8"), codec_name
+        self.codec_name = codec_name
+        self._leaf = leaf
+        self._dtype = np.dtype(dtype)
+        self._cb = chunk_bytes
+        self._nbytes = len(parent_buf)
+        self._raw: Optional[bytes] = None
+        self._xor = self._q = self._scale = None
+        if codec_name == "xor_rle":
+            fps, xor = ops.fused_xor_fingerprint(leaf, parent_buf,
+                                                 chunk_bytes)
+            self._xor = np.asarray(xor)          # [C, R, 128] u32
+        else:
+            fps, q, scale = ops.fused_int8_fingerprint(leaf, parent_buf,
+                                                       chunk_bytes)
+            self._q = np.asarray(q)              # [C, NB, 256] i32
+            self._scale = np.asarray(scale)      # [C, NB] f32
+        self.fps = np.asarray(fps)               # [C, 4] u32
+
+    def _seg_len(self, c: int) -> int:
+        return min(self._cb, self._nbytes - c * self._cb)
+
+    def raw_seg(self, c: int) -> bytes:
+        """Raw bytes of chunk ``c`` (lazy leaf serialization, memoized)."""
+        if self._raw is None:
+            self._raw = np.asarray(self._leaf).tobytes()
+        return self._raw[c * self._cb: c * self._cb + self._cb]
+
+    def blob(self, c: int) -> bytes:
+        """The encoded blob for chunk ``c`` — byte-identical to
+        ``get_codec(self.codec_name).encode(seg, parent_seg, dtype)``."""
+        seg_len = self._seg_len(c)
+        if self.codec_name == "xor_rle":
+            # kernel word layout zero-pads the tail chunk; the pad XORs to
+            # zero (both sides padded), so trimming to seg_len restores
+            # exactly the host codec's XOR vector
+            x = np.frombuffer(self._xor[c].tobytes()[:seg_len], np.uint8)
+            rle = _rle_encode(x)
+            if len(rle) + 1 >= seg_len:
+                return _RAW_FLAG + self.raw_seg(c)
+            return _RLE_FLAG + rle
+        from repro.optim.compression import BLOCK
+
+        n_elems = seg_len // self._dtype.itemsize
+        nblk = -(-n_elems // BLOCK)
+        pad = nblk * BLOCK - n_elems
+        q = self._q[c, :nblk].astype(np.int8)
+        scale = self._scale[c, :nblk].reshape(-1, 1)
+        header = (int(pad).to_bytes(4, "little")
+                  + int(q.size).to_bytes(4, "little"))
+        return header + q.tobytes() + scale.tobytes()

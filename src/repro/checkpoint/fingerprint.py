@@ -24,6 +24,20 @@ def supports_chunk_bytes(chunk_bytes: int) -> bool:
     return chunk_bytes >= 4 * LANES and chunk_bytes % (4 * LANES) == 0
 
 
+def normalize_leaf(leaf):
+    """The array the device kernels would consume for this leaf, or None
+    when the leaf can't be fingerprinted/encoded on device (python
+    objects, complex dtypes, odd itemsizes — the registry then falls back
+    to host hashing and host codecs)."""
+    if isinstance(leaf, jax.Array):
+        return leaf
+    leaf = np.asarray(leaf)
+    if (leaf.dtype == object or leaf.dtype.kind == "c"
+            or leaf.dtype.itemsize not in (1, 2, 4, 8)):
+        return None
+    return leaf
+
+
 def leaf_fingerprints(leaf, chunk_bytes: int) -> Optional[np.ndarray]:
     """-> ``[n_chunks, FP_WORDS]`` uint32 fingerprints of the leaf's raw
     bytes on the registry's chunk grid, or None when the grid is
@@ -32,11 +46,9 @@ def leaf_fingerprints(leaf, chunk_bytes: int) -> Optional[np.ndarray]:
 
     if not supports_chunk_bytes(chunk_bytes):
         return None
-    if not isinstance(leaf, jax.Array):
-        leaf = np.asarray(leaf)
-        if (leaf.dtype == object or leaf.dtype.kind == "c"
-                or leaf.dtype.itemsize not in (1, 2, 4, 8)):
-            return None
+    leaf = normalize_leaf(leaf)
+    if leaf is None:
+        return None
     if leaf.size == 0:
         return np.zeros((0, FP_WORDS), np.uint32)
     return np.asarray(ops.chunk_fingerprint(leaf, chunk_bytes))

@@ -58,6 +58,7 @@ import numpy as np
 import jax
 
 from repro.checkpoint import codecs as _codecs
+from repro.checkpoint import fingerprint as _fingerprint
 from repro.checkpoint.fingerprint import leaf_fingerprints
 
 CHUNK_BYTES = 4 * 1024 * 1024
@@ -177,6 +178,35 @@ class Registry:
             return None
         return ent
 
+    def _fused_leaf(self, leaf, codec_name: str, dtype: str, nbytes: int,
+                    parent: Optional[str], name: str, i: int, n: int,
+                    memo: Dict[tuple, bytes]
+                    ) -> Optional[_codecs.FusedLeafEncoding]:
+        """A fused fingerprint+encode pass for this leaf, or None when the
+        device path doesn't apply and the legacy two-pass flow (device
+        fingerprints, host codecs) runs instead.  Outputs are bit/byte-
+        identical either way; only the number of reads over the state
+        differs."""
+        if codec_name not in ("xor_rle", "int8") or not nbytes:
+            return None
+        if _codecs.codec_backend() != "kernel":
+            return None
+        if not _fingerprint.supports_chunk_bytes(self.chunk_bytes):
+            return None
+        if codec_name == "int8" and dtype != "float32":
+            # the int8 kernel bitcasts the u32 word view straight to f32;
+            # other float dtypes take the host quantizer's astype path
+            return None
+        arr = _fingerprint.normalize_leaf(leaf)
+        if arr is None or arr.size == 0:
+            return None
+        parent_buf = b"".join(
+            self._chunk_raw(parent, name, i, c, memo=memo)
+            for c in range(n))
+        return _codecs.FusedLeafEncoding(arr, parent_buf, codec_name,
+                                         _resolve_dtype(dtype),
+                                         self.chunk_bytes)
+
     def _push(self, trees: Dict[str, Any], meta: Optional[dict],
               tag: Optional[str], parent: Optional[str], *,
               compression: CompressionSpec = "none",
@@ -202,7 +232,18 @@ class Registry:
                 n = -(-nbytes // cb) if nbytes else 0
                 pleaf = self._parent_leaf(parent_manifest, name, i,
                                           dtype, shape, nbytes)
-                fps = leaf_fingerprints(leaf, cb) if fingerprints else None
+                codec_name = _codecs.resolve_compression(
+                    compression, name, _resolve_dtype(dtype),
+                    pleaf is not None, lossy_ok, chunk_bytes=cb)
+                fenc = (self._fused_leaf(leaf, codec_name, dtype, nbytes,
+                                         parent, name, i, n,
+                                         parent_raw_memo)
+                        if fingerprints else None)
+                if fenc is not None:
+                    fps = fenc.fps
+                else:
+                    fps = (leaf_fingerprints(leaf, cb)
+                           if fingerprints else None)
                 if fps is not None:
                     fp_bytes += nbytes
                 fp_list = (None if fps is None
@@ -225,28 +266,36 @@ class Registry:
                     fp_clean += n
                     chunks = [dict(ch) for ch in pleaf["chunks"]]
                 else:
-                    data = _leaf_raw(leaf) if nbytes else b""
-                    codec_name = _codecs.resolve_compression(
-                        compression, name, _resolve_dtype(dtype),
-                        pleaf is not None, lossy_ok, chunk_bytes=cb)
+                    # in fused mode the leaf was already read (and
+                    # encoded) on device; serialization happens lazily
+                    # only for incompressible raw-fallback chunks
+                    data = (b"" if fenc is not None
+                            else _leaf_raw(leaf) if nbytes else b"")
                     codec = _codecs.get_codec(codec_name)
                     for c in range(n):
-                        seg = data[c * cb: (c + 1) * cb]
+                        seg_len = min(cb, nbytes - c * cb)
                         if clean[c]:
                             fp_clean += 1
                             chunks.append(dict(pleaf["chunks"][c]))
                             continue
-                        entry = {"raw": len(seg)}
+                        entry = {"raw": seg_len}
                         if codec_name == "none":
-                            blob = seg
+                            blob = data[c * cb: (c + 1) * cb]
                         else:
-                            parent_raw = self._chunk_raw(
-                                parent, name, i, c, memo=parent_raw_memo)
-                            blob = codec.encode(seg, parent_raw,
-                                                _resolve_dtype(dtype))
-                            enc_raw += len(seg)
-                            if len(blob) >= len(seg):
-                                blob = seg  # incompressible: store raw
+                            if fenc is not None:
+                                blob = fenc.blob(c)
+                            else:
+                                parent_raw = self._chunk_raw(
+                                    parent, name, i, c,
+                                    memo=parent_raw_memo)
+                                blob = codec.encode(
+                                    data[c * cb: (c + 1) * cb],
+                                    parent_raw, _resolve_dtype(dtype))
+                            enc_raw += seg_len
+                            if len(blob) >= seg_len:
+                                # incompressible: store raw
+                                blob = (fenc.raw_seg(c) if fenc is not None
+                                        else data[c * cb: (c + 1) * cb])
                             else:
                                 entry["enc"] = codec_name
                                 entry["pim"] = parent
@@ -262,9 +311,9 @@ class Registry:
                         entry["wire"] = len(blob)
                         if new:
                             written += len(blob)
-                            written_raw += len(seg)
+                            written_raw += seg_len
                         if key not in parent_keys:
-                            delta += len(seg)
+                            delta += seg_len
                             wire += len(blob)
                             parent_keys.add(key)  # count shared chunks once
                         chunks.append(entry)

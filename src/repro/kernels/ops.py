@@ -128,6 +128,64 @@ def chunk_fingerprint(x, chunk_bytes: int):
     return _fp.collapse_lanes(lanes)
 
 
+def _codec_words(cur, parent_u8, chunk_bytes: int, pair: bool):
+    """Both sides of a fused codec pass in the kernel's word layout."""
+    import numpy as np
+
+    from repro.kernels import codec as _ck
+    from repro.kernels import fingerprint as _fp
+
+    words = _fp.chunked_words(cur, chunk_bytes)
+    pwords = _fp.chunked_words(np.frombuffer(parent_u8, np.uint8),
+                               chunk_bytes)
+    assert pwords.shape == words.shape, (words.shape, pwords.shape)
+    if pair:
+        words, pwords = _ck.pair_rows(words), _ck.pair_rows(pwords)
+    return words, pwords
+
+
+def fused_xor_fingerprint(cur, parent_raw: bytes, chunk_bytes: int):
+    """One fused pass over ``cur``: chunk fingerprints + XOR vs parent.
+
+    Returns ``(fps [C, 4] u32, xor_words [C, R, 128] u32)``.  The
+    fingerprints are bit-identical to ``chunk_fingerprint(cur, ...)``;
+    the XOR words feed the host RLE pass of the ``xor_rle`` codec, whose
+    output is byte-identical to the host codec's.
+    """
+    from repro.kernels import codec as _ck
+    from repro.kernels import fingerprint as _fp
+
+    words, pwords = _codec_words(cur, parent_raw, chunk_bytes, pair=False)
+    if _on_tpu():
+        lanes, xor = _ck.xor_fp_lanes(words, pwords)
+    elif _interpret_forced():
+        lanes, xor = _ck.xor_fp_lanes(words, pwords, interpret=True)
+    else:
+        lanes, xor = _ck.xor_fp_ref(words, pwords)
+    return _fp.collapse_lanes(lanes), xor
+
+
+def fused_int8_fingerprint(cur, parent_raw: bytes, chunk_bytes: int):
+    """One fused pass over ``cur``: chunk fingerprints + blockwise int8
+    quantization of the f32 delta vs the decoded parent.
+
+    Returns ``(fps [C, 4] u32, q int32 [C, NB, 256], scale f32 [C, NB])``
+    with ``NB`` quant blocks per (zero-padded) chunk; ``q``/``scale``
+    match ``optim.compression._quant`` on each chunk's delta bit-exactly.
+    """
+    from repro.kernels import codec as _ck
+    from repro.kernels import fingerprint as _fp
+
+    words, pwords = _codec_words(cur, parent_raw, chunk_bytes, pair=True)
+    if _on_tpu():
+        lanes, q, scale = _ck.int8_fp_lanes(words, pwords)
+    elif _interpret_forced():
+        lanes, q, scale = _ck.int8_fp_lanes(words, pwords, interpret=True)
+    else:
+        lanes, q, scale = _ck.int8_fp_ref(words, pwords)
+    return _fp.collapse_lanes(lanes), q, scale
+
+
 def mlstm_scan(q, k, v, i_gate, f_gate, state=None):
     """mLSTM over a sequence.  TPU: chunkwise-parallel Pallas kernel (MXU
     matmuls); portable path: the stabilized lax.scan recurrence.

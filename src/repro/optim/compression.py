@@ -10,8 +10,17 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 BLOCK = 256
+# scale = max|x| * (1/127), NOT max|x| / 127: under jit XLA rewrites a
+# division by a constant into a reciprocal multiply (1-ulp different),
+# while eager mode keeps the true division — the multiply form is the
+# one expression both agree on bit-exactly, which the fused Pallas codec
+# kernels (kernels/codec.py) rely on to reproduce this quantizer
+# byte-identically from inside a jitted pallas_call.  A numpy scalar (not
+# a jnp array) so Pallas kernel bodies can close over it as a literal.
+_INV127 = np.float32(1.0) / np.float32(127.0)
 
 
 def ef_init(grads):
@@ -25,7 +34,7 @@ def _quant(x):
     pad = (-flat.size) % BLOCK
     flat = jnp.pad(flat, (0, pad))
     blocks = flat.reshape(-1, BLOCK)
-    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) * _INV127
     scale = jnp.maximum(scale, 1e-12)
     q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
     return q, scale.astype(jnp.float32), orig_shape, pad

@@ -5,3 +5,55 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# -- shared hypothesis strategies -------------------------------------------
+# hypothesis is a dev-only dependency (requirements-dev.txt): the property
+# suites guard with importorskip/skipif, and these strategies only exist
+# when the library does.
+try:
+    from hypothesis import strategies as _st
+except ImportError:
+    _st = None
+
+if _st is not None:
+    import numpy as _np
+
+    @_st.composite
+    def codec_leaf_pairs(draw, max_elems=4096, dtype=_np.float32):
+        """(cur, parent) same-shape leaves with a drawn dirt pattern —
+        the input space of the delta codecs: clean (empty delta), thin
+        dirty stripes (the RLE sweet spot), or fully redrawn
+        (incompressible, exercising the raw-literal fallback).  Sizes
+        deliberately straddle the 512-byte kernel word grid and chunk
+        boundaries."""
+        n = draw(_st.integers(min_value=1, max_value=max_elems))
+        seed = draw(_st.integers(min_value=0, max_value=2**32 - 1))
+        kind = draw(_st.sampled_from(["clean", "stripes", "dense"]))
+        rng = _np.random.default_rng(seed)
+        cur = rng.standard_normal(n).astype(dtype)
+        if kind == "clean":
+            parent = cur.copy()
+        elif kind == "dense":
+            parent = rng.standard_normal(n).astype(dtype)
+        else:
+            parent = cur.copy()
+            stripes = draw(_st.integers(min_value=1, max_value=4))
+            for _ in range(stripes):
+                i = draw(_st.integers(min_value=0, max_value=n - 1))
+                w = draw(_st.integers(min_value=1, max_value=64))
+                parent[i: i + w] += 1.0
+        return cur, parent
+
+    @_st.composite
+    def sparse_byte_vectors(draw, max_len=2048):
+        """Mostly-zero uint8 vectors for the RLE layer itself, with runs
+        and gaps drawn around the encoder's 16-byte gap-absorption
+        threshold."""
+        n = draw(_st.integers(min_value=1, max_value=max_len))
+        x = _np.zeros(n, _np.uint8)
+        for _ in range(draw(_st.integers(min_value=0, max_value=6))):
+            i = draw(_st.integers(min_value=0, max_value=n - 1))
+            w = draw(_st.integers(min_value=1, max_value=48))
+            v = draw(_st.integers(min_value=1, max_value=255))
+            x[i: i + w] = v
+        return x

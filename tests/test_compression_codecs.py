@@ -1,12 +1,28 @@
 """Delta codecs + registry edge cases: roundtrip bit-exactness per codec
-(including under full migration replay), empty/all-dirty deltas, and leaf
-sizes straddling chunk boundaries."""
+(including under full migration replay), empty/all-dirty deltas, leaf
+sizes straddling chunk boundaries, and the property-based host-codec
+suite that serves as the pinned oracle for the fused kernel path
+(tests/test_codec_kernels.py)."""
 import numpy as np
 import pytest
 
 from repro.checkpoint import Registry
-from repro.checkpoint.codecs import get_codec
+from repro.checkpoint.codecs import (
+    _RAW_FLAG,
+    _RLE_FLAG,
+    _rle_decode,
+    _rle_encode,
+    get_codec,
+    resolve_compression,
+)
 from repro.core import HashConsumer, MigrationPolicy, run_migration_experiment
+
+try:
+    from hypothesis import given, settings
+    import conftest as _strat
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 CB = 64 * 1024
 
@@ -224,3 +240,161 @@ def test_unknown_codec_rejected():
         MigrationPolicy(compression="gzip")
     with pytest.raises(ValueError):
         MigrationPolicy(compression={"state": "zstd"})
+
+
+# ---------------------------------------------------------------------------
+# codec-name validation: unknown names must fail early with ValueError
+# ---------------------------------------------------------------------------
+
+def test_get_codec_unknown_name_raises_value_error():
+    """get_codec used to raise a bare KeyError deep inside a push for
+    names that slipped past validation ('auto' included — it's a spec,
+    not a concrete codec)."""
+    with pytest.raises(ValueError, match="unknown codec 'zstd'"):
+        get_codec("zstd")
+    with pytest.raises(ValueError, match="resolve_compression"):
+        get_codec("auto")
+
+
+def test_resolve_compression_rejects_unknown_resolved_entry():
+    """A dict spec naming an unknown codec for the pushed tree must fail
+    at resolve time with ValueError, not silently map to a fallback (or
+    KeyError at push time)."""
+    with pytest.raises(ValueError, match="zstd"):
+        resolve_compression({"state": "zstd"}, "state",
+                            np.dtype(np.float32), True, True,
+                            chunk_bytes=CB)
+    # entries for *other* trees don't affect this tree (it defaults to
+    # "none"), matching the documented dict semantics
+    assert resolve_compression({"params": "int8"}, "state",
+                               np.dtype(np.float32), True, True,
+                               chunk_bytes=CB) == "none"
+
+
+def test_push_with_unknown_dict_codec_raises_value_error(tmp_path):
+    reg = Registry(str(tmp_path), chunk_bytes=CB)
+    base = {"a": np.arange(100_000, dtype=np.float32)}
+    full = reg.push_image({"state": base})
+    with pytest.raises(ValueError, match="zstd"):
+        reg.push_delta({"state": {"a": base["a"] + 1}}, full.image_id,
+                       compression={"state": "zstd"})
+
+
+# ---------------------------------------------------------------------------
+# RLE layer boundary cases (deterministic)
+# ---------------------------------------------------------------------------
+
+def test_rle_empty_and_single_byte():
+    assert _rle_encode(np.zeros(100, np.uint8)) == b""
+    x = np.zeros(100, np.uint8)
+    x[42] = 7
+    blob = _rle_encode(x)
+    assert len(blob) == 9  # one (zrun, lit_len, 1 byte) token
+    np.testing.assert_array_equal(_rle_decode(blob, 100), x)
+
+
+def test_rle_gap_absorption_threshold():
+    """Zero gaps <= 16 bytes are absorbed into one literal (a token
+    header costs 8 bytes); wider gaps split tokens."""
+    near = np.zeros(200, np.uint8)
+    near[10] = near[10 + 16] = 1     # gap of 15 zeros: absorbed
+    far = np.zeros(200, np.uint8)
+    far[10] = far[10 + 17] = 1       # gap of 16 zeros: split
+    blob_near, blob_far = _rle_encode(near), _rle_encode(far)
+    assert len(blob_near) == 8 + 17  # one token spanning the gap
+    assert len(blob_far) == 2 * 9    # two single-byte tokens
+    np.testing.assert_array_equal(_rle_decode(blob_near, 200), near)
+    np.testing.assert_array_equal(_rle_decode(blob_far, 200), far)
+
+
+def test_xor_rle_literal_fallback_boundary():
+    """Exactly at len(rle)+1 >= len(raw) the codec must emit the raw
+    literal (wire never exceeds raw+1); just under it, the RLE stream."""
+    codec = get_codec("xor_rle")
+    parent = np.zeros(64, np.uint8)
+    dense = np.arange(1, 65, dtype=np.uint8)  # all 64 bytes dirty
+    blob = codec.encode(dense.tobytes(), parent.tobytes(),
+                        np.dtype(np.uint8))
+    assert blob[:1] == _RAW_FLAG and len(blob) == 65
+    sparse = np.zeros(64, np.uint8)
+    sparse[5] = 9
+    blob = codec.encode(sparse.tobytes(), parent.tobytes(),
+                        np.dtype(np.uint8))
+    assert blob[:1] == _RLE_FLAG and len(blob) == 10
+    for cur in (dense, sparse):
+        enc = codec.encode(cur.tobytes(), parent.tobytes(),
+                           np.dtype(np.uint8))
+        assert codec.decode(enc, parent.tobytes(),
+                            np.dtype(np.uint8)) == cur.tobytes()
+
+
+# ---------------------------------------------------------------------------
+# int8 error feedback: lossy chain closed by a bit-exact lossless flush
+# ---------------------------------------------------------------------------
+
+def test_int8_error_feedback_exact_flush_restores_bit_exact(tmp_path):
+    """N lossy int8 rounds accumulate bounded quantization error (each
+    round re-encodes against the receiver's lossy reconstruction — the
+    EF trick), and one exact=True flush lands the receiver on the pushed
+    state bit-for-bit."""
+    reg = Registry(str(tmp_path), chunk_bytes=CB)
+    rng = np.random.default_rng(5)
+    cur = rng.standard_normal(3 * CB // 4).astype(np.float32)
+    parent_id = reg.push_image({"state": {"a": cur}}).image_id
+    for _ in range(4):
+        cur = cur + rng.standard_normal(cur.size).astype(np.float32) * 0.01
+        rep = reg.push_delta({"state": {"a": cur}}, parent_id,
+                             compression="int8")
+        assert rep.lossy
+        pulled, _ = reg.pull_image(rep.image_id)
+        got = pulled["state"]["a"]
+        assert not np.array_equal(got, cur)          # genuinely lossy
+        # EF bound: reconstruction error stays one quant step, it does
+        # not compound across rounds
+        assert np.max(np.abs(got - cur)) < 1e-3
+        parent_id = rep.image_id
+    flush = reg.push_delta({"state": {"a": cur}}, parent_id,
+                           compression="int8", exact=True)
+    assert not flush.lossy
+    pulled, _ = reg.pull_image(flush.image_id)
+    np.testing.assert_array_equal(pulled["state"]["a"], cur)
+
+
+# ---------------------------------------------------------------------------
+# property-based suite (hypothesis; the kernel path's pinned host oracle)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(pair=_strat.codec_leaf_pairs())
+    def test_xor_rle_roundtrip_property(pair):
+        cur, parent = pair
+        codec = get_codec("xor_rle")
+        raw, praw = cur.tobytes(), parent.tobytes()
+        blob = codec.encode(raw, praw, np.dtype(np.float32))
+        assert codec.decode(blob, praw, np.dtype(np.float32)) == raw
+        assert len(blob) <= len(raw) + 1
+
+    @settings(max_examples=40, deadline=None)
+    @given(x=_strat.sparse_byte_vectors())
+    def test_rle_roundtrip_property(x):
+        np.testing.assert_array_equal(
+            _rle_decode(_rle_encode(x), len(x)), x)
+
+    @settings(max_examples=30, deadline=None)
+    @given(pair=_strat.codec_leaf_pairs(max_elems=2048))
+    def test_int8_decode_error_bounded_property(pair):
+        """decode(encode(cur)) deviates from cur by at most one quant
+        step of the largest per-block delta (scale = max|delta|/127)."""
+        cur, parent = pair
+        codec = get_codec("int8")
+        raw, praw = cur.tobytes(), parent.tobytes()
+        blob = codec.encode(raw, praw, np.dtype(np.float32))
+        dec = np.frombuffer(codec.decode(blob, praw, np.dtype(np.float32)),
+                            np.float32)
+        step = np.max(np.abs(cur - parent)) / 127.0
+        assert np.max(np.abs(dec - cur)) <= step * 1.01 + 1e-7
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_codec_property_suite_requires_hypothesis():
+        pass

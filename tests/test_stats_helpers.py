@@ -1,0 +1,96 @@
+"""Percentile/latency helper edge cases (analysis/stats.py and its
+benchmarks/stats.py re-export): the tail math must be deterministic and
+well-defined at the degenerate ends — n=1, ties, p999 on arrays shorter
+than 1000 samples — because benchmark report rows are diffed bit-for-bit
+across runs."""
+import numpy as np
+import pytest
+
+from repro.analysis.stats import (
+    LATENCY_PERCENTILES,
+    latency_summary,
+    percentile,
+    percentiles,
+    summarize_spans,
+)
+
+
+def test_percentile_single_sample_is_that_sample():
+    for p in (0.0, 50.0, 99.0, 99.9, 100.0):
+        assert percentile([7.25], p) == 7.25
+
+
+def test_percentile_all_ties_is_the_tie():
+    xs = [3.5] * 9
+    for p in (0.0, 37.0, 99.9, 100.0):
+        assert percentile(xs, p) == 3.5
+
+
+def test_p999_on_short_arrays_interpolates_toward_max():
+    """With n << 1000 the p999 rank lands between the last two order
+    statistics — it must interpolate, not index out of range, and it can
+    never exceed the max."""
+    xs = list(range(10))  # rank = 0.999 * 9 = 8.991
+    got = percentile(xs, 99.9)
+    assert 8.0 < got < 9.0
+    assert got == pytest.approx(8.991)
+    assert percentile(xs, 100.0) == 9.0
+
+
+def test_percentile_matches_numpy_default_method():
+    rng = np.random.default_rng(3)
+    xs = rng.standard_normal(257).tolist()
+    for p in (0.0, 12.5, 50.0, 99.0, 99.9, 100.0):
+        assert percentile(xs, p) == pytest.approx(
+            float(np.percentile(xs, p)), abs=1e-12)
+
+
+def test_percentile_rejects_out_of_range_and_empty():
+    with pytest.raises(ValueError):
+        percentile([1.0], 101.0)
+    with pytest.raises(ValueError):
+        percentile([1.0], -0.5)
+    with pytest.raises(ValueError):
+        percentile([], 50.0)
+
+
+def test_percentiles_key_naming_drops_decimal_point():
+    out = percentiles([1.0, 2.0], LATENCY_PERCENTILES)
+    assert set(out) == {"p50", "p99", "p999"}
+    assert percentiles([5.0], (25.0,)) == {"p25": 5.0}
+
+
+def test_latency_summary_empty_is_all_none_row():
+    row = latency_summary([])
+    assert row["n"] == 0
+    assert row["mean"] is None and row["max"] is None
+    assert row["p50"] is None and row["p999"] is None
+
+
+def test_latency_summary_rounding_and_fields():
+    row = latency_summary([0.12345678, 0.2, 0.3], ndigits=4)
+    assert row["n"] == 3
+    assert row["mean"] == round((0.12345678 + 0.2 + 0.3) / 3, 4)
+    assert row["max"] == 0.3
+    assert row["p50"] == 0.2
+    unrounded = latency_summary([0.12345678], ndigits=None)
+    assert unrounded["mean"] == 0.12345678
+
+
+def test_summarize_spans_empty_and_ties():
+    assert summarize_spans([]) == {"p50": None, "p99": None}
+    out = summarize_spans([2.0, 2.0, 2.0])
+    assert out == {"p50": 2.0, "p99": 2.0}
+
+
+def test_benchmarks_stats_reexports_same_objects():
+    """The operator CLI (PYTHONPATH=src) and the benchmarks must share
+    one implementation, not two drifting copies."""
+    import benchmarks.stats as bstats
+    import repro.analysis.stats as astats
+
+    assert bstats.percentile is astats.percentile
+    assert bstats.latency_summary is astats.latency_summary
+    assert bstats.summarize_spans is astats.summarize_spans
+    assert bstats.percentiles is astats.percentiles
+    assert bstats.LATENCY_PERCENTILES is astats.LATENCY_PERCENTILES
