@@ -188,6 +188,27 @@ def main(argv=None) -> int:
     print(f"# chaos done in {time.time()-t:.1f}s", file=sys.stderr)
 
     t = time.time()
+    # sim engine: epoch-batched (fluid) vs per-message kernel throughput,
+    # 10k-pod smoke, one timed chaos seed (also in --quick so CI uploads
+    # BENCH_sim.json and the speedup gate has fresh numbers)
+    from benchmarks.sim_scale import run_sim_scale
+    sim_out = run_sim_scale(quick=args.quick,
+                            out_path="results/BENCH_sim.json")
+    st = sim_out["steady_1k"]
+    _csv("sim/steady_1k", st["fluid"]["wall_s"],
+         f"speedup={st['speedup']}x fluid={st['fluid']['msgs_per_wall_s']}"
+         f"msg/s baseline={st['baseline']['msgs_per_wall_s']}msg/s")
+    _csv("sim/poisson", sim_out["poisson"]["fluid"]["wall_s"],
+         f"speedup={sim_out['poisson']['speedup']}x")
+    sm = sim_out["smoke_10k"]
+    _csv("sim/smoke", sm["wall_total_s"],
+         f"pods={sm['n_pods']} msgs={sm['messages']} ok={sm['ok']}")
+    ch = sim_out["chaos_seed"]
+    _csv("sim/chaos_seed", ch["wall_s"],
+         f"pods={ch['n_pods']} invariant_ok={ch['invariant_ok']}")
+    print(f"# sim_scale done in {time.time()-t:.1f}s", file=sys.stderr)
+
+    t = time.time()
     # serving: tail latency under migration (dual-serving handoff vs
     # stop-then-replay vs cold) over flat + edge_wan, plus one injected
     # mid-handoff fault with retry (also in --quick so CI exercises the

@@ -1,0 +1,279 @@
+"""Fleet-scale sim engine benchmark: epoch-batched vs per-message.
+
+Measures the discrete-event kernel itself, not migration policy: how fast
+the simulator pushes steady-state message traffic through consumer pods.
+
+  steady_1k   1k pods, constant-gap traffic, no migrations.  The fluid
+              engine advances each pod analytically per epoch; the
+              per-message baseline (``REPRO_SIM_FLUID=0`` semantics, here
+              ``Cluster(fluid=False)``) pays one heap event per arrival
+              and per completion.  ``speedup`` is the headline ratio and
+              the CI regression gate.
+  poisson_1k  same fleet with per-message Poisson draws + token RNG — the
+              honest variant: the two interleaved RNG draws per message
+              are irreducible (bit-identity pins the stream order), so
+              the speedup here bounds what real harnesses see.
+  smoke_10k   10k pods / >= 1M messages, fluid only, service logs off —
+              the scale acceptance gate (budget: 120 s wall).
+  chaos_seed  one seeded fault-schedule fleet run (crashes, flaps, stalls,
+              registry outages) timed wall-clock with the chaos suite's
+              crash-consistency invariant checked.
+  census      opt-in event-census counters (``Sim(census=True)``) for the
+              steady fluid run — where the remaining heap events go.
+
+Determinism is asserted here too: the steady fluid fleet is run twice and
+the ``fleet_state()`` arrays must match exactly.
+
+  PYTHONPATH=src python -m benchmarks.sim_scale            # full profile
+  PYTHONPATH=src python -m benchmarks.sim_scale --quick    # CI smoke
+  ... --check-baseline   # fail if speedup < 0.8x committed baseline
+
+Output: results/BENCH_sim.json (schema: docs/scaling.md).  The committed
+reference lives at benchmarks/baselines/BENCH_sim.json; the gate compares
+speedup ratios, not absolute events/sec, so it is machine-independent.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+from typing import Dict, Optional
+
+BASELINE_PATH = os.path.join(os.path.dirname(__file__), "baselines",
+                             "BENCH_sim.json")
+# fail --check-baseline when speedup drops below this fraction of the
+# committed reference ratio (>20% regression)
+BASELINE_TOLERANCE = 0.8
+SMOKE_BUDGET_S = 120.0
+
+
+def _steady_fleet(n_pods: int, rate: float, duration: float, *,
+                  fluid: bool, poisson: bool = False, census: bool = False,
+                  keep_log: bool = True, processing_ms: float = 5.0,
+                  warm: float = 2.0, seed: int = 0) -> Dict:
+    """Run ``n_pods`` consumers on steady traffic for ``duration`` sim
+    seconds (after a ``warm`` boot window) and report wall-clock cost.
+
+    Constant-gap draws isolate kernel cost; ``poisson=True`` switches to
+    the harnesses' open-loop Poisson + token-RNG draws (two RNG calls per
+    message, stream order pinned by bit-identity with the seed)."""
+    import numpy as np
+
+    from repro.cluster.cluster import Cluster
+    from repro.core.workload import HashConsumer, open_loop_gaps
+
+    with tempfile.TemporaryDirectory() as root:
+        cluster = Cluster(root, num_nodes=max(2, min(16, n_pods // 64 + 2)),
+                          fluid=fluid, census=census)
+        sim, api, broker = cluster.sim, cluster.api, cluster.broker
+        num_nodes = len(api.nodes)
+        pods = []
+
+        for i in range(n_pods):
+            queue = broker.declare_queue(f"q-{i}")
+            if poisson:
+                rng = np.random.default_rng(seed * 1009 + i)
+                gaps = open_loop_gaps(rng, rate)
+
+                def draw(rng=rng, gaps=gaps):
+                    return next(gaps), {"token": int(rng.integers(0, 2048))}
+            else:
+                gap = 1.0 / rate
+                payload = {"token": i & 2047}  # read-only; shared per pod
+
+                def draw(gap=gap, payload=payload):
+                    return gap, payload
+            queue.attach_source(draw)
+
+            def boot(i=i, queue=queue):
+                pod = yield from api.create_pod(
+                    f"bench-{i}", f"node{i % num_nodes}", HashConsumer(),
+                    queue, processing_ms=processing_ms)
+                pod.keep_service_log = keep_log
+                pod.start()
+                pods.append(pod)
+
+            sim.process(boot(), name=f"boot-{i}")
+
+        sim.run(until=warm)
+        state0 = api.fleet_state()
+        n0 = int(state0["n_processed"].sum())
+        # the timed window includes the terminal fleet_state(): in fluid
+        # mode that folds every open epoch plan, so deferred per-message
+        # work is paid inside the measurement, not smuggled past it
+        t0 = time.perf_counter()
+        sim.run(until=warm + duration)
+        state = api.fleet_state()
+        wall = time.perf_counter() - t0
+        msgs = int(state["n_processed"].sum()) - n0
+        stats = sim.stats()
+        return {
+            "n_pods": n_pods,
+            "rate_per_pod": rate,
+            "sim_seconds": duration,
+            "messages": msgs,
+            "wall_s": round(wall, 4),
+            "msgs_per_wall_s": round(msgs / wall, 1) if wall > 0 else None,
+            "heap_events": stats["events_total"],
+            "census": stats["events"] if census else None,
+            "fingerprint": {
+                "digest_sum": int(np.uint64(0) + state["last_msg_id"].sum()),
+                "n_processed": int(state["n_processed"].sum()),
+            },
+        }
+
+
+def _smoke_10k(n_pods: int, rate: float, duration: float,
+               min_msgs: int = 1_000_000, seed: int = 0) -> Dict:
+    """Scale smoke: fluid engine, logs off — must fit SMOKE_BUDGET_S."""
+    t0 = time.perf_counter()
+    res = _steady_fleet(n_pods, rate, duration, fluid=True, keep_log=False,
+                        seed=seed)
+    wall_total = time.perf_counter() - t0
+    res["wall_total_s"] = round(wall_total, 2)  # includes boot + teardown
+    res["budget_s"] = SMOKE_BUDGET_S
+    res["min_msgs"] = min_msgs
+    res["ok"] = bool(wall_total < SMOKE_BUDGET_S
+                     and res["messages"] >= min_msgs)
+    return res
+
+
+def _chaos_seed(n_pods: int, *, seed: int = 3, num_nodes: int = 8) -> Dict:
+    """One seeded fault-schedule fleet migration run, timed wall-clock,
+    with the chaos suite's rollback/verification invariant checked."""
+    from benchmarks.chaos import _chaos_schedule
+
+    from repro.core import MigrationPolicy, run_fleet_experiment
+
+    schedule = _chaos_schedule(seed, 3, n_pods, num_nodes)
+    t0 = time.perf_counter()
+    with tempfile.TemporaryDirectory() as root:
+        fleet = run_fleet_experiment(
+            n_pods, "ms2m_individual", 4.0, registry_root=root,
+            mode="parallel", max_concurrent=8, seed=seed,
+            num_nodes=num_nodes, faults=schedule, allow_failures=True,
+            policy=MigrationPolicy(max_attempts=3, retry_backoff_s=1.0))
+    wall = time.perf_counter() - t0
+    ok = all(r.state_verified for r in fleet.reports)
+    for f in fleet.failures:
+        ok = ok and bool(f.get("rolled_back") and f.get("source_serving")
+                         and f.get("source_verified"))
+    return {"n_pods": n_pods, "seed": seed, "wall_s": round(wall, 2),
+            "n_migrated": fleet.n_migrated, "n_failed": fleet.n_failed,
+            "invariant_ok": bool(ok)}
+
+
+def run_sim_scale(quick: bool = False,
+                  out_path: Optional[str] = None) -> Dict:
+    if quick:
+        steady = dict(n_pods=1000, rate=8.0, duration=10.0)
+        poisson = dict(n_pods=256, rate=8.0, duration=6.0)
+        smoke = dict(n_pods=2000, rate=2.0, duration=30.0,
+                     min_msgs=100_000)
+        chaos_pods = 64
+    else:
+        steady = dict(n_pods=1000, rate=8.0, duration=30.0)
+        poisson = dict(n_pods=512, rate=8.0, duration=15.0)
+        smoke = dict(n_pods=10_000, rate=2.0, duration=52.0)
+        # migration cost grows superlinearly with fleet size (every open
+        # migration syncs against all active sources): 256 pods keeps the
+        # full profile under ~2 min for this stage
+        chaos_pods = 256
+
+    out: Dict = {"quick": quick}
+
+    # service logs off: the kernel benchmark measures the engine, not the
+    # application-level audit trail (both modes honor keep_service_log)
+    fluid = _steady_fleet(**steady, fluid=True, census=True, keep_log=False)
+    fluid2 = _steady_fleet(**steady, fluid=True, keep_log=False)
+    assert fluid["fingerprint"] == fluid2["fingerprint"], \
+        "steady fluid fleet not deterministic across runs"
+    base = _steady_fleet(**steady, fluid=False, keep_log=False)
+    assert fluid["fingerprint"] == base["fingerprint"], \
+        "fluid vs per-message fleet state diverged"
+    speedup = fluid["msgs_per_wall_s"] / base["msgs_per_wall_s"]
+    out["steady_1k"] = {"fluid": fluid, "baseline": base,
+                        "speedup": round(speedup, 2)}
+    out["census"] = fluid["census"]
+
+    pf = _steady_fleet(**poisson, fluid=True, poisson=True, keep_log=False)
+    pb = _steady_fleet(**poisson, fluid=False, poisson=True, keep_log=False)
+    assert pf["fingerprint"] == pb["fingerprint"], \
+        "fluid vs per-message diverged under Poisson traffic"
+    out["poisson"] = {
+        "fluid": pf, "baseline": pb,
+        "speedup": round(pf["msgs_per_wall_s"] / pb["msgs_per_wall_s"], 2)}
+
+    out["smoke_10k"] = _smoke_10k(**smoke)
+    out["chaos_seed"] = _chaos_seed(chaos_pods)
+
+    path = out_path or os.path.join("results", "BENCH_sim.json")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as fh:
+        json.dump(out, fh, indent=2)
+    return out
+
+
+def check_baseline(out: Dict, baseline_path: str = BASELINE_PATH) -> bool:
+    """Machine-independent regression gate: the fluid/per-message speedup
+    ratio must stay within BASELINE_TOLERANCE of the committed one."""
+    if not os.path.exists(baseline_path):
+        print(f"sim_scale: no baseline at {baseline_path}; gate skipped")
+        return True
+    with open(baseline_path) as fh:
+        ref = json.load(fh)
+    ok = True
+    for key in ("steady_1k", "poisson"):
+        ref_speedup = ref.get(key, {}).get("speedup")
+        cur_speedup = out.get(key, {}).get("speedup")
+        if not ref_speedup or not cur_speedup:
+            continue
+        floor = BASELINE_TOLERANCE * ref_speedup
+        line = (f"sim_scale[{key}]: speedup {cur_speedup:.1f}x "
+                f"(baseline {ref_speedup:.1f}x, floor {floor:.1f}x)")
+        if cur_speedup < floor:
+            print(line + " REGRESSION", file=sys.stderr)
+            ok = False
+        else:
+            print(line + " ok")
+    if out.get("smoke_10k") and not out["smoke_10k"]["ok"]:
+        print(f"sim_scale[smoke]: {out['smoke_10k']}", file=sys.stderr)
+        ok = False
+    if out.get("chaos_seed") and not out["chaos_seed"]["invariant_ok"]:
+        print(f"sim_scale[chaos]: invariant failed {out['chaos_seed']}",
+              file=sys.stderr)
+        ok = False
+    return ok
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--check-baseline", action="store_true",
+                    help="fail if speedup regresses >20%% vs the "
+                         "committed baseline")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    out = run_sim_scale(quick=args.quick, out_path=args.out)
+    s = out["steady_1k"]
+    print(f"steady_1k: fluid {s['fluid']['msgs_per_wall_s']:.0f} msg/s, "
+          f"baseline {s['baseline']['msgs_per_wall_s']:.0f} msg/s, "
+          f"speedup {s['speedup']:.1f}x")
+    print(f"poisson:   speedup {out['poisson']['speedup']:.1f}x")
+    sm = out["smoke_10k"]
+    print(f"smoke:     {sm['n_pods']} pods, {sm['messages']} msgs in "
+          f"{sm['wall_total_s']:.1f}s (ok={sm['ok']})")
+    ch = out["chaos_seed"]
+    print(f"chaos:     {ch['n_pods']} pods seed {ch['seed']} in "
+          f"{ch['wall_s']:.1f}s (invariant_ok={ch['invariant_ok']})")
+    if args.check_baseline and not check_baseline(out):
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

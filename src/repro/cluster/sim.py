@@ -33,7 +33,24 @@ from repro.analysis.sanitizer import (SanitizerViolation, SimSanitizer,
 
 _SANITIZE_ENV = "REPRO_SIM_SANITIZE"
 _TIEBREAK_ENV = "REPRO_SIM_TIEBREAK"
+_FLUID_ENV = "REPRO_SIM_FLUID"
+_CENSUS_ENV = "REPRO_SIM_CENSUS"
 _M64 = (1 << 64) - 1
+
+# event-census categories (docs/scaling.md): attribution buckets for
+# popped heap events, derived from process names / scheduling sites
+CENSUS_CATEGORIES = ("message", "heartbeat", "link", "fault", "other")
+
+
+def _census_category(name: str) -> str:
+    """Classify a process by name prefix for the opt-in event census."""
+    if name.startswith(("pod:", "producer", "source:")):
+        return "message"
+    if name.startswith("heartbeat"):
+        return "heartbeat"
+    if name.startswith("fault"):
+        return "fault"
+    return "other"
 
 
 def _mix64(counter: int, seed: int) -> int:
@@ -94,6 +111,7 @@ class _Proc:
     def __init__(self, gen: Generator, name: str):
         self.gen = gen
         self.name = name
+        self.cat = _census_category(name)
         self.done = Condition.__new__(Condition)  # filled by Sim.process
 
 
@@ -103,7 +121,9 @@ class Interrupt(Exception):
 
 class Sim:
     def __init__(self, sanitize: Optional[bool] = None,
-                 tiebreak_seed: Optional[int] = None):
+                 tiebreak_seed: Optional[int] = None,
+                 fluid: Optional[bool] = None,
+                 census: Optional[bool] = None):
         self.now = 0.0
         self._heap: list = []
         self._counter = itertools.count()
@@ -117,18 +137,32 @@ class Sim:
             env = os.environ.get(_TIEBREAK_ENV, "")
             tiebreak_seed = int(env) if env else None
         self.tiebreak_seed = tiebreak_seed
+        # epoch-batched (fluid) message dynamics: ON by default, with
+        # REPRO_SIM_FLUID=0 selecting the legacy per-message-event flow
+        # (docs/scaling.md).  The flag only gates an optimization — the
+        # observable timeline is bit-identical either way.
+        if fluid is None:
+            fluid = os.environ.get(_FLUID_ENV, "") != "0"
+        self.fluid_enabled = bool(fluid)
+        # opt-in event census: count popped heap events per category so
+        # perf regressions are attributable (BENCH_sim.json)
+        if census is None:
+            census = os.environ.get(_CENSUS_ENV, "") not in ("", "0")
+        self._census: Optional[dict] = (
+            {c: 0 for c in CENSUS_CATEGORIES} if census else None)
 
     # -- scheduling ----------------------------------------------------------
-    def _push(self, t: float, fn: Callable, arg: Any = None):
+    def _push(self, t: float, fn: Callable, arg: Any = None,
+              cat: str = "other"):
         c = next(self._counter)
         if self.tiebreak_seed is not None:
             c = _mix64(c, self.tiebreak_seed)
-        heapq.heappush(self._heap, (t, c, fn, arg))
+        heapq.heappush(self._heap, (t, c, fn, arg, cat))
 
     def _ready(self, proc: _Proc, value: Any = None):
         if self.sanitizer is not None:
             self.sanitizer.on_ready(proc)
-        self._push(self.now, lambda v: self._step(proc, v), value)
+        self._push(self.now, lambda v: self._step(proc, v), value, proc.cat)
 
     def condition(self, name: str = "") -> Condition:
         return Condition(self, name)
@@ -163,14 +197,15 @@ class Sim:
         proc = _Proc(gen, name)
         done = Condition(self, f"done:{name}")
         proc.done = done
-        self._push(self.now, lambda v: self._step(proc, v), None)
+        self._push(self.now, lambda v: self._step(proc, v), None, proc.cat)
         return done
 
-    def call_at(self, t: float, fn: Callable):
-        self._push(max(t, self.now), lambda _: fn(), None)
+    def call_at(self, t: float, fn: Callable, category: str = "other"):
+        self._push(max(t, self.now), lambda _: fn(), None, category)
 
-    def call_after(self, delay: float, fn: Callable):
-        self.call_at(self.now + delay, fn)
+    def call_after(self, delay: float, fn: Callable,
+                   category: str = "other"):
+        self.call_at(self.now + delay, fn, category=category)
 
     # -- process stepping ------------------------------------------------------
     def _step(self, proc: _Proc, send_value: Any):
@@ -187,7 +222,8 @@ class Sim:
                 if self.sanitizer is not None:
                     self.sanitizer.on_wait(proc, yielded)
         elif isinstance(yielded, (int, float)):
-            self._push(self.now + float(yielded), lambda v: self._step(proc, v), None)
+            self._push(self.now + float(yielded),
+                       lambda v: self._step(proc, v), None, proc.cat)
         else:
             raise TypeError(f"process {proc.name} yielded {type(yielded)}")
 
@@ -200,18 +236,35 @@ class Sim:
     # -- run -------------------------------------------------------------------
     def run(self, until: Optional[float] = None,
             stop_when: Optional[Condition] = None):
+        census = self._census
         while self._heap:
             if stop_when is not None and stop_when.triggered:
                 return
-            t, _, fn, arg = self._heap[0]
+            head = self._heap[0]
+            t = head[0]
             if until is not None and t > until:
                 self.now = until
                 return
             heapq.heappop(self._heap)
             self.now = t
-            fn(arg)
+            if census is not None:
+                census[head[4]] += 1
+            head[2](head[3])
         if until is not None:
             self.now = max(self.now, until)
+
+    def stats(self) -> dict:
+        """Kernel introspection: clock, heap size and (when the census is
+        on — ``Sim(census=True)`` / ``REPRO_SIM_CENSUS=1``) popped-event
+        counts per category.  With the census off ``events`` is ``None``
+        so callers can tell "not measured" from "zero events"."""
+        events = dict(self._census) if self._census is not None else None
+        return {"now": self.now,
+                "heap_len": len(self._heap),
+                "census_enabled": self._census is not None,
+                "events": events,
+                "events_total": (sum(events.values())
+                                 if events is not None else None)}
 
     # -- quiescence audit ------------------------------------------------------
     def assert_quiescent(self, **allow) -> None:
@@ -354,7 +407,7 @@ class Link:
             if not self._flows:
                 return
         gen = self._gen
-        self.sim.call_at(t, lambda: self._on_tick(gen))
+        self.sim.call_at(t, lambda: self._on_tick(gen), category="link")
 
     def _on_tick(self, gen: int) -> None:
         if gen != self._gen:  # superseded by an arrival/departure
@@ -386,7 +439,7 @@ class Link:
                 yield duration
             else:
                 timer = Condition(self.sim, f"{self.name}:xfer")
-                self.sim.call_after(duration, timer.trigger)
+                self.sim.call_after(duration, timer.trigger, category="link")
                 yield self.sim.any_of(timer, abort)
                 if not timer.triggered:
                     undelivered = nbytes * (1.0 - (self.sim.now - t0)

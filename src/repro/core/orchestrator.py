@@ -581,19 +581,28 @@ def run_fleet_experiment(
 
     for i in range(n_pods):
         qname = f"orders-{i}"
-        broker.declare_queue(qname)
+        queue = broker.declare_queue(qname)
 
-        def producer(i=i, qname=qname):
+        # per-queue arrival source (legacy draw interleave: gap, then
+        # token); fleet pods have no per-message observers, so steady
+        # traffic runs as fluid epochs (docs/scaling.md)
+        def make_draw(i=i):
             from repro.core.workload import open_loop_gaps
             rng = np.random.default_rng(seed * 1009 + i)
             gaps = open_loop_gaps(rng, message_rate)
-            while not stop_producing["flag"]:
-                yield next(gaps)
-                token = int(rng.integers(0, 2048))
-                broker.publish(qname, {"token": token})
-                published[i].append(token)
 
-        sim.process(producer(), name=f"producer-{i}")
+            def draw():
+                if stop_producing["flag"]:
+                    return None
+                gap = next(gaps)
+                return gap, {"token": int(rng.integers(0, 2048))}
+
+            return draw
+
+        def on_publish(msg, i=i):
+            published[i].append(msg.payload["token"])
+
+        queue.attach_source(make_draw(), on_publish=on_publish)
         src_node = "node0" if mode == "drain" else f"node{i % max(1, num_nodes - 1)}"
         identity = f"consumer-{i}" if rolling else None
 
@@ -644,7 +653,11 @@ def run_fleet_experiment(
     # settle, stop traffic, let consumers drain their queues
     sim.run(until=sim.now + settle_time)
     stop_producing["flag"] = True
+    for i in range(n_pods):
+        broker.queues[f"orders-{i}"].halt_source()
     sim.run(until=sim.now + 2.0)
+    for i in range(n_pods):  # land lazy arrivals / fold epochs at end-of-run
+        broker.queues[f"orders-{i}"].sync(sim.now)
 
     # -- per-pod verification: reference fold of each queue's log ------------
     by_queue = {t.queue.name: (rep, t)

@@ -453,6 +453,7 @@ class MigrationContext:
         if self.cutoff is not None:
             return self.cutoff.lam, self.cutoff.mu
         q = self.broker.queues[self.primary_queue]
+        q.sync(self.sim.now)  # count lazily-drawn arrivals due by now
         lam = q.total_published / self.sim.now if self.sim.now > 0 else 0.0
         mu = 1000.0 / self.source.processing_ms
         return lam, mu

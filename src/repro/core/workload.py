@@ -75,6 +75,10 @@ def request_stream(rng: np.random.Generator, *,
                "max_new_tokens": int(rng.integers(lo_m, hi_m + 1))}
 
 
+_FNV_PRIME = 1099511628211
+_U64_MASK = (1 << 64) - 1
+
+
 class HashConsumer:
     """Cheap drop-in for wide sweeps: state = rolling fnv-ish hash of the
     message log.  Still an exact fold (order-sensitive), so migration
@@ -95,6 +99,42 @@ class HashConsumer:
         self.pos += 1
         self.last_msg_id = msg.msg_id
         self.n_processed += 1
+
+    def process_batch(self, msgs):
+        """Batched fold (fluid epochs): Python-int arithmetic masked to 64
+        bits is bit-identical to the per-message np.uint64 wrapping above
+        and avoids the per-call errstate context at fleet scale."""
+        d = int(self.digest)
+        last = self.last_msg_id
+        n = 0
+        for m in msgs:
+            mid = m.msg_id
+            d = ((d ^ (m.payload["token"] ^ (mid + 1))) * _FNV_PRIME) \
+                & _U64_MASK
+            last = mid
+            n += 1
+        self.digest = np.uint64(d)
+        self.pos += n
+        self.last_msg_id = last
+        self.n_processed += n
+
+    def process_pairs(self, pairs):
+        """Allocation-free fluid fold over ``(msg_id, payload)`` tuples —
+        the arithmetic-side drain path skips Message construction when
+        nothing (log, mirror, on_publish) needs the object.  Bit-identical
+        to ``process_batch``/``process``."""
+        d = int(self.digest)
+        last = self.last_msg_id
+        n = 0
+        for mid, payload in pairs:
+            d = ((d ^ (payload["token"] ^ (mid + 1))) * _FNV_PRIME) \
+                & _U64_MASK
+            last = mid
+            n += 1
+        self.digest = np.uint64(d)
+        self.pos += n
+        self.last_msg_id = last
+        self.n_processed += n
 
     def state_tree(self):
         return {"digest": np.uint64(self.digest),
@@ -265,20 +305,25 @@ def run_migration_experiment(
         batch_speedup=pol.replay_speedup if pol.batched_replay else 1.0)
 
     # -- producer: Poisson(λ), deterministic --------------------------------
+    # an arrival source instead of an inline producer process: draw order
+    # (gap, then token — the legacy interleave), stop semantics and arrival
+    # arithmetic are identical in both execution modes (docs/scaling.md)
     rng = np.random.default_rng(seed)
     gaps = open_loop_gaps(rng, message_rate)
     published: List[int] = []
     stop_producing = {"flag": False}
 
-    def producer():
-        while not stop_producing["flag"]:
-            yield next(gaps)
-            token = int(rng.integers(0, 2048))
-            broker.publish("orders", {"token": token})
-            published.append(token)
-            cutoff.observe_arrival(sim.now)
+    def draw():
+        if stop_producing["flag"]:
+            return None
+        gap = next(gaps)
+        return gap, {"token": int(rng.integers(0, 2048))}
 
-    sim.process(producer(), name="producer")
+    def on_publish(msg):
+        published.append(msg.payload["token"])
+        cutoff.observe_arrival(msg.publish_time)
+
+    primary.attach_source(draw, on_publish=on_publish)
 
     # -- source pod -----------------------------------------------------------
     source_worker = make_worker()
@@ -325,7 +370,9 @@ def run_migration_experiment(
                                    f"{entry['error']}")
             sim.run(until=sim.now + settle_time)
             stop_producing["flag"] = True
+            primary.halt_source()
             sim.run(until=sim.now + 2.0)
+            primary.sync(sim.now)  # land any lazy arrivals <= end-of-run
             from repro.core.orchestrator import audit_failed_spec
             src = audit_failed_spec(api, entry, make_worker, published,
                                     exact=not pol.batched_replay,
@@ -340,7 +387,9 @@ def run_migration_experiment(
     # -- settle + stop ----------------------------------------------------------
     sim.run(until=sim.now + settle_time)
     stop_producing["flag"] = True
+    primary.halt_source()
     sim.run(until=sim.now + 2.0)
+    primary.sync(sim.now)  # land any lazy arrivals / fold the target's epoch
 
     # -- verification: reference fold of the full log --------------------------
     verified = True

@@ -1,0 +1,215 @@
+"""Differential suite: epoch-batched (fluid) vs per-message execution.
+
+The fluid engine (docs/scaling.md) is an optimization with a hard
+contract: every observable — experiment rows, fleet reports, chaos
+invariants, sanitizer verdicts, tiebreak-perturbed runs — must be
+bit-identical to the legacy per-message event flow (``REPRO_SIM_FLUID=0``).
+These tests run both regimes in-process (the env flag is read at ``Sim``
+construction) and diff the results exactly: no tolerances.
+"""
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.broker.broker import Broker
+from repro.cluster.cluster import Cluster
+from repro.cluster.sim import Sim
+from repro.core import MigrationPolicy, run_fleet_experiment
+from repro.core.workload import HashConsumer, run_migration_experiment
+
+
+def _experiment_row(monkeypatch, fluid, strategy, rate, seed, **kw):
+    monkeypatch.setenv("REPRO_SIM_FLUID", "1" if fluid else "0")
+    with tempfile.TemporaryDirectory() as root:
+        res = run_migration_experiment(strategy, rate, registry_root=root,
+                                       seed=seed, **kw)
+    return res.row()
+
+
+# single-pod rows: cutoff-firing high rate, precopy, statefulset identity,
+# and the stop-and-copy baseline — every strategy family crosses the
+# fluid/exact boundary (mirror attach, pause, checkpoint) at least once
+ROW_CONFIGS = [
+    ("stop_and_copy", 10.0, 7, {}),
+    ("ms2m_individual", 5.0, 3, {}),
+    ("ms2m_cutoff", 60.0, 2, {}),
+    ("ms2m_precopy", 8.0, 1, {}),
+    ("ms2m_statefulset", 12.0, 5, {}),
+]
+
+
+@pytest.mark.parametrize("strategy,rate,seed,kw", ROW_CONFIGS,
+                         ids=[c[0] for c in ROW_CONFIGS])
+def test_experiment_row_bit_identical(monkeypatch, strategy, rate, seed, kw):
+    fluid = _experiment_row(monkeypatch, True, strategy, rate, seed, **kw)
+    exact = _experiment_row(monkeypatch, False, strategy, rate, seed, **kw)
+    assert fluid == exact
+
+
+def test_experiment_row_identical_under_sanitizer(monkeypatch):
+    monkeypatch.setenv("REPRO_SIM_SANITIZE", "1")
+    fluid = _experiment_row(monkeypatch, True, "ms2m_individual", 5.0, 3)
+    exact = _experiment_row(monkeypatch, False, "ms2m_individual", 5.0, 3)
+    assert fluid == exact
+
+
+def test_experiment_row_identical_under_tiebreak(monkeypatch):
+    """Schedule perturbation: splitmix64 tiebreaks reorder same-instant
+    events; the observable row must survive in both regimes."""
+    for tb_seed in ("1", "4"):
+        monkeypatch.setenv("REPRO_SIM_TIEBREAK", tb_seed)
+        fluid = _experiment_row(monkeypatch, True, "ms2m_individual", 5.0, 3)
+        exact = _experiment_row(monkeypatch, False, "ms2m_individual", 5.0, 3)
+        assert fluid == exact
+
+
+def _fleet_row(monkeypatch, fluid, *, seed=0, faults=None,
+               allow_failures=False, n_pods=3, strategy="ms2m_individual",
+               mode="parallel"):
+    monkeypatch.setenv("REPRO_SIM_FLUID", "1" if fluid else "0")
+    with tempfile.TemporaryDirectory() as root:
+        fleet = run_fleet_experiment(
+            n_pods, strategy, 8.0, registry_root=root, mode=mode,
+            max_concurrent=2, seed=seed, num_nodes=4, faults=faults,
+            allow_failures=allow_failures,
+            policy=MigrationPolicy(max_attempts=3, retry_backoff_s=1.0))
+    return fleet
+
+
+def test_fleet_report_bit_identical(monkeypatch):
+    fluid = _fleet_row(monkeypatch, True)
+    exact = _fleet_row(monkeypatch, False)
+    assert fluid.row() == exact.row()
+    assert [r.strategy for r in fluid.reports] == \
+        [r.strategy for r in exact.reports]
+
+
+def _chaos_pair(monkeypatch, seed):
+    from repro.cluster.faults import FaultSchedule
+
+    schedule_rows = None
+    out = []
+    for fluid in (True, False):
+        sched = FaultSchedule.random(
+            seed, n_faults=3, t_window=(11.0, 70.0), nodes=("node3",),
+            queues=("orders-0", "orders-1"))
+        if schedule_rows is None:
+            schedule_rows = sched.rows()
+        else:
+            assert sched.rows() == schedule_rows  # same seed, same faults
+        fleet = _fleet_row(monkeypatch, fluid, seed=seed, faults=sched,
+                           allow_failures=True, n_pods=2)
+        ok = all(r.state_verified for r in fleet.reports)
+        for f in fleet.failures:
+            ok = ok and bool(f.get("rolled_back") and f.get("source_serving")
+                             and f.get("source_verified"))
+        out.append((fleet.row(), ok))
+    return out
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_chaos_differential(monkeypatch, seed):
+    (row_f, ok_f), (row_e, ok_e) = _chaos_pair(monkeypatch, seed)
+    assert ok_f and ok_e
+    assert row_f == row_e
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", range(5, 21))
+def test_chaos_differential_extended(monkeypatch, seed):
+    (row_f, ok_f), (row_e, ok_e) = _chaos_pair(monkeypatch, seed)
+    assert ok_f and ok_e
+    assert row_f == row_e
+
+
+# -- engine unit tests --------------------------------------------------------
+
+def test_wait_not_empty_pools_ready_condition():
+    """Satellite: a non-empty queue hands every waiter one permanently
+    triggered condition instead of allocating a fresh Condition per call."""
+    sim = Sim()
+    broker = Broker(sim)
+    q = broker.declare_queue("orders")
+    q.publish({"token": 1})
+    c1 = q.wait_not_empty()
+    c2 = q.wait_not_empty()
+    assert c1 is c2 and c1.triggered
+
+
+def test_census_counters():
+    sim = Sim(census=True)
+    fired = []
+    sim.call_after(1.0, lambda: fired.append("a"), category="message")
+    sim.call_after(2.0, lambda: fired.append("b"), category="heartbeat")
+    sim.call_after(3.0, lambda: fired.append("c"))
+    sim.run(until=10.0)
+    stats = sim.stats()
+    assert fired == ["a", "b", "c"]
+    assert stats["census_enabled"] and stats["events_total"] == 3
+    assert stats["events"]["message"] == 1
+    assert stats["events"]["heartbeat"] == 1
+    assert stats["events"]["other"] == 1
+
+
+def test_census_disabled_by_default():
+    sim = Sim()
+    sim.call_after(1.0, lambda: None)
+    sim.run(until=2.0)
+    stats = sim.stats()
+    assert not stats["census_enabled"] and stats["events"] is None
+
+
+def test_halt_source_keeps_one_inflight_arrival():
+    """Legacy stop-flag semantics: arrivals <= now land, plus exactly the
+    first one after now (the producer's drawn in-flight sleep), then the
+    source closes."""
+    sim = Sim(fluid=True)
+    broker = Broker(sim)
+    q = broker.declare_queue("orders")
+    q.attach_source(lambda: (1.0, {"n": 1}))  # arrivals at t=1,2,3,...
+    sim.run(until=3.5)
+    q.halt_source()
+    sim.run(until=100.0)
+    q.sync(sim.now)
+    # t=1,2,3 landed plus the in-flight t=4 arrival; closed after
+    assert q.depth() == 4
+    assert q.total_published == 4
+
+
+def test_fleet_state_arrays():
+    with tempfile.TemporaryDirectory() as root:
+        cluster = Cluster(root, num_nodes=2)
+        sim, api, broker = cluster.sim, cluster.api, cluster.broker
+        pods = []
+        for i in range(3):
+            q = broker.declare_queue(f"q-{i}")
+            q.attach_source(lambda: (0.5, {"token": 7}))
+
+            def boot(i=i, q=q):
+                pod = yield from api.create_pod(
+                    f"p-{i}", f"node{i % 2}", HashConsumer(), q,
+                    processing_ms=10.0)
+                pod.start()
+                pods.append(pod)
+
+            sim.process(boot(), name=f"boot-{i}")
+        sim.run(until=20.0)
+        state = api.fleet_state()
+        assert state["pods"] == sorted(p.name for p in pods)
+        assert state["n_processed"].dtype == np.int64
+        # fleet_state syncs: the arrays match a direct per-pod walk
+        by_name = {p.name: p for p in pods}
+        for j, name in enumerate(state["pods"]):
+            p = by_name[name]
+            assert state["n_processed"][j] == p.worker.n_processed
+            assert state["queue_depth"][j] == p.queue.depth()
+            assert state["last_msg_id"][j] == p.worker.last_msg_id
+        assert state["n_processed"].sum() > 0
+
+
+def test_fluid_flag_off_via_constructor():
+    sim = Sim(fluid=False)
+    assert not sim.fluid_enabled
+    sim2 = Sim()
+    assert sim2.fluid_enabled
