@@ -230,6 +230,25 @@ def main(argv=None) -> int:
              f"state_verified={r['state_verified']} lost={r['lost']}")
     print(f"# serving done in {time.time()-t:.1f}s", file=sys.stderr)
 
+    t = time.time()
+    # rebalance: predictive controller vs reactive baseline under diurnal
+    # and flash-crowd arrivals + seeded chaos schedules, 3 heterogeneous
+    # model state sizes (also in --quick so CI exercises the controller
+    # and uploads rebalance.json)
+    from benchmarks.rebalance import run_rebalance
+    reb = run_rebalance(quick=args.quick, out_path="results/rebalance.json")
+    for r in reb["rows"]:
+        _csv(f"rebalance/{r['config']}@{r['schedule']}s{r['seed']}",
+             r["downtime_avoided_s"],
+             f"avoided={r['downtime_avoided_s']}qs "
+             f"per_MB={r['downtime_avoided_s_per_MB_moved']} "
+             f"dominates={r['dominates']}")
+    _csv("rebalance/summary", 0.0,
+         f"{len(reb['rows'])} cells dominates_all={reb['dominates_all']} "
+         f"chaos={len(reb['chaos'])} "
+         f"invariants_ok={reb['chaos_invariants_ok']}")
+    print(f"# rebalance done in {time.time()-t:.1f}s", file=sys.stderr)
+
     print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
     return 0
 

@@ -597,10 +597,15 @@ class APIServer:
             cond, self._hb_wake = self._hb_wake, None
             cond.trigger()
 
-    def add_node(self, name: str) -> Node:
+    def add_node(self, name: str, zone: Optional[str] = None) -> Node:
+        """Register a node.  ``zone`` is required for nodes the topology
+        does not already know when it spans more than one zone (see
+        ``NetworkTopology.ensure_node``)."""
+        # register with the topology FIRST: a zone conflict or a missing
+        # zone on a multi-zone topology must not leave a half-added node
+        self.topology.ensure_node(name, zone=zone)
         node = Node(name, sim=self.sim)
         self.nodes[name] = node
-        self.topology.ensure_node(name)
         self._hb_rescan()  # the monitor must watch the new node's down cond
         return node
 
@@ -935,8 +940,12 @@ class APIServer:
             p._fluid_sync()
         return {
             "pods": names,
+            "node": [p.node.name for p in pods],
+            "queue": [p.queue.name for p in pods],
             "queue_depth": np.array([p.queue.depth() for p in pods],
                                     dtype=np.int64),
+            "total_published": np.array(
+                [p.queue.total_published for p in pods], dtype=np.int64),
             "last_msg_id": np.array(
                 [p.worker.last_msg_id for p in pods], dtype=np.int64),
             "n_processed": np.array(

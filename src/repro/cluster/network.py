@@ -83,9 +83,39 @@ class NetworkTopology:
         self._sim = sim
         return self
 
+    def is_multizone(self) -> bool:
+        """More than one distinct zone exists (nodes or registry)."""
+        return len(set(self.zone_of.values()) | {self.registry_zone}) > 1
+
     def ensure_node(self, node: str, zone: Optional[str] = None) -> None:
-        """Register a node; unknown nodes land in the registry zone."""
-        self.zone_of.setdefault(node, zone or self.registry_zone)
+        """Register a node in ``zone``.
+
+        Already-registered nodes are left alone unless ``zone``
+        contradicts the registration (that is a wiring bug, not a
+        default).  For an unknown node, ``zone=None`` is only acceptable
+        while the topology is single-zone (there is exactly one answer);
+        on a multi-zone topology it would silently file the node next to
+        the registry — ``zone_distance == 0`` — and every placement
+        scorer (and the rebalance controller) would systematically
+        prefer it, so an explicit zone is required there."""
+        have = self.zone_of.get(node)
+        if have is not None:
+            if zone is not None and zone != have:
+                raise ValueError(
+                    f"node {node!r} is already in zone {have!r}; "
+                    f"cannot re-register it in {zone!r}")
+            return
+        if zone is None:
+            if self.is_multizone():
+                raise ValueError(
+                    f"node {node!r} needs an explicit zone on multi-zone "
+                    f"topology {self.name!r} (zones: "
+                    f"{sorted(set(self.zone_of.values()) | {self.registry_zone})}); "
+                    "defaulting to the registry zone would give it "
+                    "zone_distance == 0 and bias every placement score "
+                    "toward it")
+            zone = self.registry_zone
+        self.zone_of[node] = zone
 
     # -- classification --------------------------------------------------------
     def zone(self, node: Optional[str]) -> str:

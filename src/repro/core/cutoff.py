@@ -107,11 +107,20 @@ def choose_adaptive_strategy(lam: float, mu: float, *, fixed_s: float,
 
 @dataclasses.dataclass
 class RateEstimator:
-    """EWMA arrival/service rate estimator (events per second)."""
+    """EWMA arrival/service rate estimator (events per second).
+
+    The EWMA is seeded from the first *real* inter-event interval: blending
+    the first observation against a fake 0.0 starting rate would bias the
+    estimate low for the first several half-lives (warm-up bias), which is
+    exactly the window a short migration reads it in.  ``n_obs`` counts
+    completed intervals so controllers can gate on evidence, not elapsed
+    span.
+    """
 
     halflife: float = 10.0  # seconds of virtual time
-    _rate: float = 0.0
+    _rate: Optional[float] = None  # None until the first interval lands
     _last_t: Optional[float] = None
+    _n_obs: int = 0
 
     def observe(self, t: float):
         if self._last_t is None:
@@ -120,12 +129,25 @@ class RateEstimator:
         dt = max(t - self._last_t, 1e-9)
         self._last_t = t
         inst = 1.0 / dt
-        alpha = 1.0 - 0.5 ** (dt / self.halflife)
-        self._rate += alpha * (inst - self._rate)
+        if self._rate is None:
+            self._rate = inst  # seed from the first interval, no zero bias
+        else:
+            alpha = 1.0 - 0.5 ** (dt / self.halflife)
+            self._rate += alpha * (inst - self._rate)
+        self._n_obs += 1
 
     @property
     def rate(self) -> float:
-        return self._rate
+        return 0.0 if self._rate is None else self._rate
+
+    @property
+    def n_obs(self) -> int:
+        """Completed inter-event intervals folded into the estimate."""
+        return self._n_obs
+
+    @property
+    def has_estimate(self) -> bool:
+        return self._rate is not None
 
 
 @dataclasses.dataclass
@@ -145,7 +167,10 @@ class CutoffController:
     # fallbacks — the paper assumes λ and μ known); estimates are always
     # *tracked* either way and reported for observability.
     use_estimates: bool = False
-    min_observations_s: float = 30.0  # ~3 half-lives before trusting λ̂/μ̂
+    # evidence gate: completed intervals each estimator must have folded
+    # before its estimate is trusted.  A *count*, not an elapsed span —
+    # two observations 30 s apart are one interval, not convergence.
+    min_observations: int = 30
     lam_est: RateEstimator = dataclasses.field(default_factory=RateEstimator)
     mu_est: RateEstimator = dataclasses.field(default_factory=RateEstimator)
 
@@ -159,20 +184,22 @@ class CutoffController:
         self._last_obs = t
         self.mu_est.observe(t)
 
-    def _converged(self) -> bool:
-        span = (getattr(self, "_last_obs", 0.0)
-                - getattr(self, "_first_obs", 0.0))
-        return span >= self.min_observations_s
+    def _converged(self, est: RateEstimator) -> bool:
+        return est.n_obs >= self.min_observations
 
     @property
     def lam(self) -> float:
-        if self.use_estimates and self._converged() and self.lam_est.rate:
+        # explicit is-not-None gating: a legitimately converged tiny rate
+        # must be returned, not silently swallowed by float truthiness
+        if (self.use_estimates and self._converged(self.lam_est)
+                and self.lam_est.has_estimate):
             return self.lam_est.rate
         return self.lam_fallback
 
     @property
     def mu(self) -> float:
-        if self.use_estimates and self._converged() and self.mu_est.rate:
+        if (self.use_estimates and self._converged(self.mu_est)
+                and self.mu_est.has_estimate):
             return self.mu_est.rate
         return self.mu_fallback
 

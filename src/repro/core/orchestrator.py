@@ -89,9 +89,11 @@ def make_topology_aware_placement(api: APIServer,
     The distance term counts both legs the migration's bytes ride — the
     pull from the registry to the candidate and the affinity to the
     source's zone — times the pod's state size (the wire-byte estimate).
-    Ties break on the candidate's registry-link load (bytes still in
-    flight + active flows), then occupancy (pods already there plus
-    ``inflight`` migrations targeting it), then name (deterministic)."""
+    Ties break lexicographically on the candidate's registry-link load —
+    bytes still in flight first, then active flows (distinct units:
+    summing them would let one in-flight byte outweigh a whole flow) —
+    then occupancy (pods already there plus ``inflight`` migrations
+    targeting it), then name (deterministic)."""
     topo = api.topology
 
     def pick(pod: Pod, candidates: List[Node]) -> str:
@@ -110,7 +112,7 @@ def make_topology_aware_placement(api: APIServer,
         def score(node: Node):
             link = topo.registry_link(node.name)
             return (dist[node.name] * est_bytes,
-                    link.queued_bytes + link.n_flows,
+                    link.queued_bytes, link.n_flows,
                     len(node.pods) + inflight.get(node.name, 0), node.name)
 
         return min(candidates, key=score).name

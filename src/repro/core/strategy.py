@@ -447,16 +447,57 @@ class MigrationContext:
 
     def observed_rates(self) -> tuple:
         """(lambda, mu) estimates: the CutoffController's view when one is
-        wired (EWMA estimates or operator fallbacks), else arrival
-        throughput observed on the primary queue and the service capacity
-        implied by the pod's processing time."""
+        wired (EWMA estimates or operator fallbacks), else a windowed
+        recent-arrival-rate estimate on the primary queue and the service
+        capacity implied by the pod's processing time."""
         if self.cutoff is not None:
             return self.cutoff.lam, self.cutoff.mu
         q = self.broker.queues[self.primary_queue]
         q.sync(self.sim.now)  # count lazily-drawn arrivals due by now
-        lam = q.total_published / self.sim.now if self.sim.now > 0 else 0.0
+        lam = recent_arrival_rate(q, self.source, self.sim.now)
         mu = 1000.0 / self.source.processing_ms
         return lam, mu
+
+
+def recent_arrival_rate(queue, pod, now: float, *,
+                        halflife: float = 10.0,
+                        max_samples: int = 256) -> float:
+    """Windowed/EWMA recent arrival rate (events/s) on a queue at ``now``.
+
+    Replaces the lifetime average ``total_published / now``, which is
+    badly stale under diurnal / flash-crowd traffic (a spike an hour ago
+    and a spike right now read the same) and biased low for queues whose
+    source attached late (it divides by time the queue did not exist).
+
+    Recent arrival timestamps are reconstructed from what the broker and
+    consumer still hold at the decision instant — ids are dense, so the
+    unconsumed backlog is exactly the *newest* arrivals — extended with
+    the consumer's recent service completions when the backlog is short
+    (a drained queue folds each message within one service time of its
+    arrival, so completion spacing tracks arrival spacing).  The merged
+    timestamps feed the same EWMA :class:`~repro.core.cutoff.RateEstimator`
+    the CutoffController uses.  With fewer than two recent samples the
+    estimate falls back to the lifetime average (exact for a fresh
+    queue, and the legacy value when there is nothing better)."""
+    from repro.core.cutoff import RateEstimator
+
+    window_s = 6.0 * halflife
+    t_min = now - window_s
+    backlog = [m.publish_time for m in queue._items if m.publish_time >= t_min]
+    samples = backlog
+    if len(backlog) < max_samples and pod is not None \
+            and getattr(pod, "keep_service_log", False):
+        # completions are for *consumed* ids, backlog times for unconsumed
+        # ones — disjoint messages, so merging them never double-counts
+        svc = [t for t, _ in pod.service_log[-max_samples:] if t >= t_min]
+        samples = sorted(svc + backlog)
+    samples = samples[-max_samples:]
+    if len(samples) < 2:
+        return queue.total_published / now if now > 0 else 0.0
+    est = RateEstimator(halflife=halflife)
+    for t in samples:
+        est.observe(t)
+    return est.rate
 
 
 def tree_nbytes(tree: Any) -> int:

@@ -15,6 +15,7 @@ the legacy ``batched_replay=`` / ``replay_speedup=`` / ``precopy=`` /
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
@@ -55,6 +56,76 @@ def open_loop_gaps(rng: np.random.Generator, rate: float, *,
             r = rate * burst_factor
         yield float(rng.exponential(1.0 / r))
         n += 1
+
+
+def modulated_open_loop_gaps(rng: np.random.Generator, rate: float,
+                             rate_of_t: Callable[[float], float], *,
+                             t0: float = 0.0) -> Iterator[float]:
+    """Time-modulated open-loop arrivals: each gap is drawn at the
+    instantaneous rate ``rate * rate_of_t(t)`` evaluated at the current
+    cumulative arrival time (a stepwise-constant approximation of an
+    inhomogeneous Poisson process).  Exactly one ``rng.exponential`` call
+    per arrival, same as ``open_loop_gaps`` — the draw *count* is
+    schedule-independent, so seeded comparisons across schedules stay
+    aligned.  ``rate_of_t`` must be a pure function of time (determinism:
+    the reference fold re-walks the same arrival sequence)."""
+    if rate <= 0.0:
+        raise ValueError(f"modulated_open_loop_gaps needs rate > 0 "
+                         f"(got {rate})")
+    t = t0
+    while True:
+        r = max(rate * float(rate_of_t(t)), 1e-9)
+        gap = float(rng.exponential(1.0 / r))
+        t += gap
+        yield gap
+
+
+def diurnal_rate(period_s: float = 120.0, depth: float = 0.5,
+                 phase_s: float = 0.0) -> Callable[[float], float]:
+    """Sinusoidal day/night modulation factor: ``1 + depth*sin(...)``
+    with the given period.  ``depth`` < 1 keeps the rate positive."""
+    if not 0.0 <= depth < 1.0:
+        raise ValueError(f"diurnal depth must be in [0, 1) (got {depth})")
+    two_pi = 2.0 * math.pi
+
+    def factor(t: float) -> float:
+        return 1.0 + depth * math.sin(two_pi * (t + phase_s) / period_s)
+
+    return factor
+
+
+def flash_crowd_rate(at_s: float = 30.0, duration_s: float = 20.0,
+                     factor: float = 4.0) -> Callable[[float], float]:
+    """Step modulation: ``factor``x the base rate inside the window
+    ``[at_s, at_s + duration_s)``, 1x outside (a flash crowd)."""
+
+    def f(t: float) -> float:
+        return factor if at_s <= t < at_s + duration_s else 1.0
+
+    return f
+
+
+def make_arrival_gaps(schedule: str, rng: np.random.Generator,
+                      rate: float, **kwargs: Any) -> Iterator[float]:
+    """Named arrival-schedule factory (the rebalance harness and CLI
+    select by name):
+
+      * ``steady``      — exactly ``open_loop_gaps`` (bit-identical to
+        every existing seeded producer);
+      * ``diurnal``     — ``diurnal_rate(**kwargs)`` modulation;
+      * ``flash_crowd`` — ``flash_crowd_rate(**kwargs)`` modulation.
+    """
+    if schedule == "steady":
+        return open_loop_gaps(rng, rate, **kwargs)
+    if schedule == "diurnal":
+        return modulated_open_loop_gaps(rng, rate, diurnal_rate(**kwargs))
+    if schedule == "flash_crowd":
+        return modulated_open_loop_gaps(rng, rate,
+                                        flash_crowd_rate(**kwargs))
+    raise ValueError(f"unknown arrival schedule {schedule!r}; "
+                     "available: ['diurnal', 'flash_crowd', 'steady']")
+
+ARRIVAL_SCHEDULES = ("steady", "diurnal", "flash_crowd")
 
 
 def request_stream(rng: np.random.Generator, *,

@@ -83,11 +83,13 @@ def main(argv=None) -> int:
     ap.add_argument("--list-topologies", action="store_true",
                     help="print the topology presets and exit")
     ap.add_argument("--workload", default="fold",
-                    choices=("fold", "serving"),
+                    choices=("fold", "serving", "rebalance"),
                     help="fold = the paper's consumer workload; serving = "
                          "open-loop request stream against a slot-based "
                          "serving worker with latency tracing and the "
-                         "exactly-once completion audit")
+                         "exactly-once completion audit; rebalance = an "
+                         "N-pod fleet under faults, reactive by default "
+                         "(add --controller for the predictive rebalancer)")
     ap.add_argument("--rate", type=float, default=10.0,
                     help="arrival rate (msgs/s, or req/s with "
                          "--workload serving)")
@@ -119,6 +121,33 @@ def main(argv=None) -> int:
                          "node_flap@12,node=node1,duration=5 or "
                          "registry_outage@precopy_round:1,duration=8; "
                          "kinds: " + ", ".join(FAULT_KINDS))
+    # -- rebalance workload: the predictive controller and its knobs ------
+    ap.add_argument("--controller", action="store_true",
+                    help="enable the predictive RebalanceController "
+                         "(--workload rebalance; off = reactive baseline)")
+    ap.add_argument("--controller-tick", type=float, default=1.0,
+                    help="control-loop period, virtual seconds")
+    ap.add_argument("--controller-horizon", type=float, default=30.0,
+                    help="messages-at-risk exposure cap (s)")
+    ap.add_argument("--controller-suspect", type=float, default=90.0,
+                    help="how long a flapped node stays suspect (s)")
+    ap.add_argument("--controller-cooldown", type=float, default=30.0,
+                    help="per-queue quiet period after a move (s)")
+    ap.add_argument("--controller-max-moves", type=int, default=2,
+                    help="new migrations admitted per control tick")
+    ap.add_argument("--controller-min-risk", type=float, default=0.25,
+                    help="combined risk below which pods are ignored")
+    ap.add_argument("--controller-min-score", type=float, default=1e-9,
+                    help="messages-at-risk per byte admission bar")
+    ap.add_argument("--arrival-schedule", default="steady",
+                    choices=("steady", "diurnal", "flash_crowd"),
+                    help="arrival-rate modulation of the rebalance fleet")
+    ap.add_argument("--n-pods", type=int, default=6,
+                    help="fleet size (--workload rebalance)")
+    ap.add_argument("--num-nodes", type=int, default=4,
+                    help="cluster size (--workload rebalance)")
+    ap.add_argument("--t-end", type=float, default=150.0,
+                    help="scenario length, virtual s (--workload rebalance)")
     ap.add_argument("--max-attempts", type=int, default=1,
                     help="migration attempts before giving up (failed "
                          "attempts are rolled back: source serving again)")
@@ -130,6 +159,40 @@ def main(argv=None) -> int:
         return list_strategies()
     if args.list_topologies:
         return list_topologies()
+
+    if args.workload == "rebalance":
+        from repro.cluster.controller import (RebalanceConfig,
+                                              run_rebalance_scenario)
+
+        config = None
+        if args.controller:
+            config = RebalanceConfig(
+                tick_s=args.controller_tick,
+                horizon_s=args.controller_horizon,
+                suspect_s=args.controller_suspect,
+                cooldown_s=args.controller_cooldown,
+                max_moves_per_tick=args.controller_max_moves,
+                min_risk=args.controller_min_risk,
+                min_score=args.controller_min_score,
+                strategy=args.strategy)
+        faults = [parse_fault(spec) for spec in args.fault] or None
+        registry = args.registry or tempfile.mkdtemp(prefix="repro-registry-")
+        r = run_rebalance_scenario(
+            registry_root=registry, n_pods=args.n_pods,
+            num_nodes=args.num_nodes, message_rate=args.rate,
+            schedule=args.arrival_schedule, faults=faults, seed=args.seed,
+            t_end=args.t_end, controller=config,
+            processing_ms=args.processing_ms, topology=args.topology,
+            policy=MigrationPolicy(max_attempts=args.max_attempts,
+                                   retry_backoff_s=args.retry_backoff))
+        print(json.dumps(r.row(), indent=2))
+        if args.events:
+            print(json.dumps(r.events, indent=2))
+        print(f"[migrate] controller={'on' if config else 'off'} "
+              f"unserved={r.unserved_queue_seconds:.1f}qs "
+              f"moves={r.n_moves} moved_bytes={r.moved_wire_bytes} "
+              f"all_verified={r.all_verified}")
+        return 0 if r.all_verified else 1
 
     if args.workload == "serving":
         from repro.serving.handoff import run_serving_experiment

@@ -515,3 +515,49 @@ def test_span_bends_upward_beyond_link_saturation(tmp_path):
         wires[conc] = fleet.wire_bytes_total
     assert spans[6] > spans[2]
     assert wires[6] > wires[2]
+
+
+# ---------------------------------------------------------------------------
+# ensure_node: explicit zones on multi-zone topologies
+# ---------------------------------------------------------------------------
+
+def test_ensure_node_autofiles_only_on_single_zone_topology():
+    topo = flat_topology()
+    topo.ensure_node("late-node")          # one zone: exactly one answer
+    assert topo.zone("late-node") == topo.registry_zone
+    topo.ensure_node("late-node")          # idempotent
+    topo.ensure_node("late-node", zone=topo.registry_zone)  # consistent
+
+
+def test_ensure_node_requires_zone_when_multizone():
+    """Silently filing an unknown node next to the registry gives it
+    zone_distance == 0 and biases every placement score toward it."""
+    topo = two_zone_topology(["n0", "n1"])
+    assert topo.is_multizone()
+    with pytest.raises(ValueError, match="explicit zone"):
+        topo.ensure_node("mystery-node")
+    assert "mystery-node" not in topo.zone_of  # nothing half-registered
+    topo.ensure_node("mystery-node", zone="zone-b")
+    assert topo.zone("mystery-node") == "zone-b"
+
+
+def test_ensure_node_rejects_conflicting_reregistration():
+    topo = two_zone_topology(["n0", "n1"])
+    topo.ensure_node("n-edge", zone="zone-b")
+    with pytest.raises(ValueError, match="already in zone"):
+        topo.ensure_node("n-edge", zone="zone-a")
+    assert topo.zone("n-edge") == "zone-b"  # registration untouched
+
+
+def test_cluster_add_node_does_not_half_add_on_zone_error(tmp_path):
+    from repro.cluster.cluster import Cluster
+
+    cluster = Cluster(str(tmp_path / "reg"), num_nodes=2,
+                      topology="two_zone")
+    with pytest.raises(ValueError):
+        cluster.api.add_node("node-late")   # multi-zone: zone required
+    assert "node-late" not in cluster.api.nodes
+    assert "node-late" not in cluster.api.topology.zone_of
+    node = cluster.api.add_node("node-late", zone="zone-b")
+    assert node.name in cluster.api.nodes
+    assert cluster.api.topology.zone("node-late") == "zone-b"

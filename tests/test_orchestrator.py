@@ -267,3 +267,46 @@ def test_migration_experiment_rejects_single_node(tmp_path):
         run_migration_experiment("ms2m_individual", 8.0,
                                  registry_root=str(tmp_path / "reg"),
                                  num_nodes=1)
+
+
+# ---------------------------------------------------------------------------
+# placement tie-break: lexicographic (queued_bytes, n_flows), not their sum
+# ---------------------------------------------------------------------------
+
+def test_tiebreak_is_lexicographic_not_mixed_unit_sum():
+    """Two equidistant candidates: A's registry link holds ~2 in-flight
+    bytes across 5 flows, B's holds ~4 bytes in 1 flow.  The old mixed-unit
+    sum (queued_bytes + n_flows: 7 vs 5) ranked B first — one in-flight
+    byte outweighing a whole flow.  Bytes-then-flows must pick A."""
+    from types import SimpleNamespace
+
+    from repro.cluster.network import LinkSpec, NetworkTopology
+    from repro.cluster.sim import Sim
+    from repro.core.orchestrator import make_topology_aware_placement
+
+    sim = Sim()
+    topo = NetworkTopology(
+        "tiebreak", {"src": "home", "a": "zb", "b": "zc"},
+        registry_zone="home",
+        link_specs={"intra": LinkSpec(1e9),
+                    "cross": LinkSpec(1.0)}).bind(sim)
+
+    def occupy(node, nbytes, n):
+        link = topo.registry_link(node)
+        for _ in range(n):
+            sim.process(link.transfer(nbytes))
+
+    occupy("a", 0.4, 5)   # queued ~2 bytes, 5 flows  -> old sum 7
+    occupy("b", 4.0, 1)   # queued ~4 bytes, 1 flow   -> old sum 5
+    sim.run(until=0.001)  # admit the flows; ~nothing drains at 1 B/s
+    link_a, link_b = topo.registry_link("a"), topo.registry_link("b")
+    assert link_a.queued_bytes < link_b.queued_bytes
+    assert (link_a.queued_bytes + link_a.n_flows
+            > link_b.queued_bytes + link_b.n_flows)  # the sum misranks
+
+    pick = make_topology_aware_placement(
+        SimpleNamespace(topology=topo), {})
+    pod = SimpleNamespace(node=SimpleNamespace(name="src"), worker=None)
+    candidates = [SimpleNamespace(name=n, pods={}) for n in ("a", "b")]
+    assert pick(pod, candidates) == "a"
+    assert pick(pod, list(reversed(candidates))) == "a"  # order-independent

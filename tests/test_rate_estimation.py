@@ -1,0 +1,147 @@
+"""Regression tests for the rate-estimator bug class the rebalance
+controller would otherwise inherit (no hypothesis dependency — these run
+in every environment):
+
+  * EWMA warm-up bias — the estimator must seed from the first real
+    inter-event interval, not blend against a fake 0.0 starting rate;
+  * evidence gating — the cutoff controller must gate on completed
+    observation *count*, not elapsed span;
+  * float-truthiness — a converged near-zero λ̂ must be returned, not
+    silently swallowed into the fallback;
+  * ``MigrationContext.observed_rates`` — the no-cutoff path must report
+    a windowed *recent* arrival rate, not the lifetime average (which
+    reads a spike an hour ago and a spike right now the same).
+"""
+import pytest
+
+from repro.cluster.sim import Sim
+from repro.core.cutoff import CutoffController, RateEstimator
+from repro.core.strategy import recent_arrival_rate
+
+
+# -- EWMA warm-up bias -------------------------------------------------------
+
+def test_rate_estimator_seeds_from_first_interval():
+    """Blending the first observation against a fake 0.0 starting rate
+    biased the estimate low for the first several half-lives — exactly
+    the window a short migration reads it in."""
+    est = RateEstimator(halflife=10.0)
+    est.observe(0.0)
+    assert not est.has_estimate  # no interval yet
+    est.observe(0.1)
+    assert est.has_estimate
+    assert est.rate == pytest.approx(10.0)  # exactly 1/dt, no zero bias
+
+
+def test_rate_estimator_counts_completed_intervals():
+    est = RateEstimator()
+    assert est.n_obs == 0
+    for k in range(5):
+        est.observe(k * 1.0)
+    assert est.n_obs == 4  # the first observe starts the clock
+
+
+def test_rate_estimator_converges_quickly_after_seeding():
+    """With correct seeding, 50 steady observations land within 5% — the
+    zero-seeded version needed hundreds to shake off the bias."""
+    est = RateEstimator(halflife=2.0)
+    t = 0.0
+    for _ in range(50):
+        t += 0.1
+        est.observe(t)
+    assert est.rate == pytest.approx(10.0, rel=0.05)
+
+
+# -- evidence gating ---------------------------------------------------------
+
+def test_controller_gates_on_observation_count_not_span():
+    """Two observations 30 s apart are one interval of evidence, not
+    convergence: an elapsed-span gate would trust them."""
+    c = CutoffController(t_replay_max=10.0, mu_fallback=20.0,
+                         lam_fallback=5.0, use_estimates=True,
+                         min_observations=30)
+    c.observe_arrival(0.0)
+    c.observe_arrival(30.0)  # long span, single interval
+    assert c.lam_est.n_obs == 1
+    assert c.lam == 5.0  # still the fallback
+    t = 30.0
+    for _ in range(30):  # cross the evidence gate
+        t += 0.1
+        c.observe_arrival(t)
+    assert c.lam_est.n_obs >= c.min_observations
+    assert c.lam == c.lam_est.rate  # gate open: the estimate, not 5.0
+    for _ in range(600):  # several half-lives of steady 10/s evidence
+        t += 0.1
+        c.observe_arrival(t)
+    assert c.lam == pytest.approx(10.0, rel=0.2)
+
+
+def test_ungated_estimates_never_leak_without_use_estimates():
+    c = CutoffController(t_replay_max=10.0, mu_fallback=20.0,
+                         lam_fallback=5.0)  # use_estimates defaults False
+    t = 0.0
+    for _ in range(100):
+        t += 0.1
+        c.observe_arrival(t)
+        c.observe_service(t)
+    assert c.lam == 5.0 and c.mu == 20.0  # observability only
+
+
+def test_converged_tiny_rate_is_not_swallowed():
+    """A legitimately converged near-zero λ̂ must be returned: float
+    truthiness on the estimate would silently fall back and shrink the
+    cutoff threshold's denominator."""
+    c = CutoffController(t_replay_max=10.0, mu_fallback=20.0,
+                         lam_fallback=5.0, use_estimates=True,
+                         min_observations=10)
+    t = 0.0
+    for _ in range(12):
+        t += 1000.0  # one arrival every 1000 s: λ = 1e-3
+        c.observe_arrival(t)
+    assert c.lam == pytest.approx(1e-3, rel=1e-6)
+    assert c.lam != c.lam_fallback
+
+
+# -- windowed λ̂ on the primary queue (observed_rates' no-cutoff path) -------
+
+def _queue_with_arrivals(sim: Sim, times):
+    from repro.broker.broker import Broker
+
+    broker = Broker(sim)
+    q = broker.declare_queue("orders")
+    for t in times:
+        sim.run(until=t)
+        broker.publish("orders", {"token": 1})
+    return q
+
+
+def test_recent_arrival_rate_reflects_a_spike():
+    """100 s of 1 msg/s followed by a 10 msg/s spike in the last 5 s: the
+    lifetime average (~1.4/s) buries the spike; the windowed estimate
+    must report the recent regime."""
+    sim = Sim()
+    slow = [float(t) for t in range(1, 101)]            # 1/s for 100 s
+    fast = [100.0 + 0.1 * k for k in range(1, 51)]      # 10/s for 5 s
+    q = _queue_with_arrivals(sim, slow + fast)
+    sim.run(until=105.0)
+    lam = recent_arrival_rate(q, None, 105.0, halflife=2.0)
+    lifetime = q.total_published / 105.0
+    assert lifetime < 2.0
+    assert lam > 5.0            # the spike dominates the window
+    assert lam > 3.0 * lifetime
+
+
+def test_recent_arrival_rate_matches_steady_rate():
+    sim = Sim()
+    q = _queue_with_arrivals(sim, [0.25 * k for k in range(1, 401)])
+    sim.run(until=100.0)
+    lam = recent_arrival_rate(q, None, 100.0)
+    assert lam == pytest.approx(4.0, rel=0.1)
+
+
+def test_recent_arrival_rate_falls_back_with_no_samples():
+    sim = Sim()
+    from repro.broker.broker import Broker
+
+    q = Broker(sim).declare_queue("empty")
+    assert recent_arrival_rate(q, None, 50.0) == 0.0

@@ -1,0 +1,211 @@
+"""Predictive rebalance controller: decision-table units for the pure
+scorers, proactive-drain-beats-reactive end-to-end, disabled-by-default
+bit-identity, sanitizer + tiebreak-perturbation robustness, and the
+fluid <-> per-message differential with the controller in the loop."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.cluster import Fault
+from repro.cluster.controller import (
+    RebalanceConfig,
+    move_cost_bytes,
+    move_score,
+    predicted_messages_at_risk,
+    run_rebalance_scenario,
+)
+from repro.core.workload import (
+    ARRIVAL_SCHEDULES,
+    diurnal_rate,
+    flash_crowd_rate,
+    make_arrival_gaps,
+    modulated_open_loop_gaps,
+    open_loop_gaps,
+)
+
+
+# ---------------------------------------------------------------------------
+# decision table: the pure scorers
+# ---------------------------------------------------------------------------
+
+def test_messages_at_risk_zero_arrivals_is_just_the_backlog():
+    # λ = 0: the catch-up window adds nothing beyond the standing backlog
+    assert predicted_messages_at_risk(0.0, 10.0, 40.0, 30.0) == 40.0
+
+
+def test_messages_at_risk_finite_catchup_inside_horizon():
+    # catch-up = 40/(10-2) = 5 s < horizon: exposure is the catch-up time
+    assert predicted_messages_at_risk(2.0, 10.0, 40.0, 30.0) == \
+        pytest.approx(40.0 + 2.0 * 5.0)
+
+
+def test_messages_at_risk_saturated_is_capped_by_horizon():
+    # λ >= μ: catch-up diverges; the horizon bounds the exposure instead
+    # of the score going infinite (which would starve every other signal)
+    risk = predicted_messages_at_risk(6.0, 6.0, 200.0, 30.0)
+    assert math.isfinite(risk)
+    assert risk == pytest.approx(200.0 + 6.0 * 30.0)
+
+
+def test_messages_at_risk_long_but_finite_catchup_is_also_capped():
+    # catch-up = 900/(10-9) = 900 s >> horizon
+    assert predicted_messages_at_risk(9.0, 10.0, 900.0, 30.0) == \
+        pytest.approx(900.0 + 9.0 * 30.0)
+
+
+def test_move_cost_scales_with_both_zone_legs():
+    near = move_cost_bytes(1e6, 0, 0)
+    far = move_cost_bytes(1e6, 2, 1)
+    assert near == pytest.approx(1e6)
+    assert far == pytest.approx(4e6)  # 1 + registry(2) + source(1) legs
+    assert move_cost_bytes(0.0, 0, 0) == 1.0  # floor: never divide by ~0
+
+
+def test_suspect_saturated_backlog_outranks_safe_idle_pod():
+    # the table row the controller exists for: a flapping node holding a
+    # saturated queue must outrank a healthy near-empty one
+    hot = move_score(1.0, predicted_messages_at_risk(6.0, 6.0, 200.0, 30.0),
+                     move_cost_bytes(8e6, 1, 1))
+    idle = move_score(0.25, predicted_messages_at_risk(1.0, 10.0, 2.0, 30.0),
+                      move_cost_bytes(8e6, 1, 1))
+    assert hot > 50.0 * idle
+
+
+def test_cheaper_state_wins_at_equal_risk():
+    mar = predicted_messages_at_risk(4.0, 8.0, 50.0, 30.0)
+    small = move_score(1.0, mar, move_cost_bytes(1e5, 1, 1))
+    big = move_score(1.0, mar, move_cost_bytes(1e8, 1, 1))
+    assert small > big  # messages-at-risk *per byte moved*
+
+
+# ---------------------------------------------------------------------------
+# arrival schedules (core.workload)
+# ---------------------------------------------------------------------------
+
+def test_steady_schedule_is_bit_identical_to_open_loop_gaps():
+    a = open_loop_gaps(np.random.default_rng(7), 6.0)
+    b = make_arrival_gaps("steady", np.random.default_rng(7), 6.0)
+    assert [next(a) for _ in range(200)] == [next(b) for _ in range(200)]
+
+
+def test_modulated_gaps_are_deterministic_per_seed():
+    for schedule in ARRIVAL_SCHEDULES:
+        a = make_arrival_gaps(schedule, np.random.default_rng(3), 5.0)
+        b = make_arrival_gaps(schedule, np.random.default_rng(3), 5.0)
+        assert [next(a) for _ in range(300)] == [next(b) for _ in range(300)]
+
+
+def test_diurnal_rate_oscillates_and_flash_crowd_steps():
+    r = diurnal_rate(period_s=100.0, depth=0.5)
+    assert r(25.0) == pytest.approx(1.5)   # peak of the sine
+    assert r(75.0) == pytest.approx(0.5)   # trough
+    f = flash_crowd_rate(at_s=30.0, duration_s=20.0, factor=4.0)
+    assert f(10.0) == 1.0 and f(40.0) == 4.0 and f(60.0) == 1.0
+
+
+def test_flash_crowd_compresses_gaps_during_the_burst():
+    rng = np.random.default_rng(11)
+    gaps = modulated_open_loop_gaps(
+        rng, 5.0, flash_crowd_rate(at_s=30.0, duration_s=30.0, factor=8.0))
+    t, before, during = 0.0, [], []
+    for _ in range(600):
+        g = next(gaps)
+        t += g
+        if t < 30.0:
+            before.append(g)
+        elif t < 60.0:
+            during.append(g)
+    assert during, "burst window produced no arrivals"
+    assert np.mean(during) < np.mean(before) / 3.0
+
+
+def test_unknown_schedule_is_rejected():
+    with pytest.raises(ValueError, match="steady"):
+        make_arrival_gaps("lunar", np.random.default_rng(0), 5.0)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end scenarios
+# ---------------------------------------------------------------------------
+
+def _flap_story():
+    """node1 flaps once early (8 s) and once late, longer (25 s): the
+    first flap is the controller's tell, the second is the exposure the
+    baseline eats in place."""
+    return [Fault("node_flap", at=20.0, node="node1", duration=8.0),
+            Fault("node_flap", at=70.0, node="node1", duration=25.0)]
+
+
+def _scenario(tmp_path, tag, **kw):
+    kw.setdefault("n_pods", 4)
+    kw.setdefault("num_nodes", 3)
+    kw.setdefault("message_rate", 5.0)
+    kw.setdefault("t_end", 100.0)
+    kw.setdefault("sample_dt", 1.0)
+    return run_rebalance_scenario(
+        registry_root=str(tmp_path / f"reg-{tag}"), **kw)
+
+
+def test_proactive_drain_beats_reactive_on_node_flap(tmp_path):
+    base = _scenario(tmp_path, "base", faults=_flap_story(), seed=0)
+    ctrl = _scenario(tmp_path, "ctrl", faults=_flap_story(), seed=0,
+                     controller=RebalanceConfig())
+    assert base.all_verified and ctrl.all_verified
+    assert base.n_moves == 0
+    assert ctrl.n_moves > 0               # it actually acted...
+    assert ctrl.moved_wire_bytes > 0
+    # ...ahead of the long flap: service exposure strictly improves
+    assert ctrl.unserved_queue_seconds < base.unserved_queue_seconds
+    kinds = {e["kind"] for e in ctrl.events}
+    assert "rebalance_suspect" in kinds and "rebalance_move" in kinds
+
+
+def test_reactive_default_is_deterministic_and_verified(tmp_path):
+    # controller=None is the default: two identical runs, bit-identical
+    # rows — the no-controller path carries zero nondeterminism from the
+    # controller module being imported/loaded
+    a = _scenario(tmp_path, "a", faults=_flap_story(), seed=1)
+    b = _scenario(tmp_path, "b", faults=_flap_story(), seed=1)
+    assert a.all_verified
+    assert a.row() == b.row()
+    assert a.n_moves == 0 and a.moved_wire_bytes == 0
+
+
+def test_existing_experiment_rows_unchanged_by_controller_module(tmp_path):
+    # loading the controller subsystem must not perturb the pre-existing
+    # fleet experiment: same call, same row, before and after the import
+    # machinery above has pulled in repro.cluster.controller
+    from repro.core import run_fleet_experiment
+
+    r1 = run_fleet_experiment(3, "ms2m_individual", 8.0,
+                              registry_root=str(tmp_path / "f1"), seed=2)
+    r2 = run_fleet_experiment(3, "ms2m_individual", 8.0,
+                              registry_root=str(tmp_path / "f2"), seed=2)
+    assert r1.all_verified
+    assert r1.row() == r2.row()
+
+
+def test_controller_survives_sanitizer_and_tiebreak_perturbation(tmp_path):
+    # runtime sanitizer on + 5 different event-tiebreak seeds: the
+    # controller's conclusions may shift with scheduling order, but every
+    # run must verify and conserve messages end-to-end
+    for ts in range(5):
+        r = _scenario(tmp_path, f"ts{ts}", faults=_flap_story(), seed=3,
+                      controller=RebalanceConfig(), sanitize=True,
+                      tiebreak_seed=ts, t_end=90.0)
+        assert r.all_verified, f"tiebreak_seed={ts} failed verification"
+        assert r.processed_total == r.published_total, \
+            f"tiebreak_seed={ts} lost/duplicated messages"
+
+
+@pytest.mark.parametrize("schedule", ["diurnal", "flash_crowd"])
+def test_fluid_and_per_message_rows_match_with_controller(tmp_path, schedule):
+    # PR 9's fluid epochs must stay bit-identical with the controller in
+    # the loop reading fleet_state() snapshots every tick
+    kw = dict(faults=_flap_story(), seed=4, schedule=schedule,
+              controller=RebalanceConfig(), t_end=90.0)
+    fluid = _scenario(tmp_path, f"fl-{schedule}", fluid=True, **kw)
+    exact = _scenario(tmp_path, f"pm-{schedule}", fluid=False, **kw)
+    assert fluid.all_verified
+    assert fluid.row() == exact.row()
